@@ -1,0 +1,45 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,fig2,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (µs medians, steady-state).
+Default sizes are scaled for the single-core container; --full uses the
+paper's sizes. Roofline/dry-run numbers live in experiments/ (they come from
+the AOT pipeline, not this driver).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig2,fig3,fig4,table1,sae")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+
+    from . import projections, sae_tables
+
+    sections = {
+        "fig1": lambda: projections.fig1_radius(full=args.full),
+        "fig2": lambda: projections.fig2_size(full=args.full),
+        "fig3": lambda: projections.fig3_trilevel(full=args.full),
+        "table1": lambda: projections.table1_scaling(full=args.full),
+        "fig4": projections.fig4_parallel,
+        "sae": lambda: sae_tables.tables(full=args.full),
+    }
+    print("name,us_per_call,derived")
+    for key, fn in sections.items():
+        if only and key not in only:
+            continue
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end serving driver: build a small dense LM, run BATCHED requests
+through prefill-free greedy decode (the serving engine), and report
+tokens/s. This is the e2e ``serve a small model with batched requests``
+deliverable (runs in ~1 min on the CPU container).
+
+    PYTHONPATH=src python examples/serve_lm.py [--batch 8] [--new 32]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import registry
+from repro.models import params as PM
+from repro.serving import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b",
+                    help="any assigned arch (smoke-scaled for CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt_len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = registry.smoke_config(args.arch)
+    api = models.get(cfg)
+    params = PM.init_params(api.template(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    t0 = time.perf_counter()
+    out = engine.generate(params, cfg, prompts, max_new=args.new)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    toks = args.batch * (args.prompt_len + args.new)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.new}")
+    print(f"generated shape={out.shape} in {dt:.1f}s "
+          f"({toks / dt:.0f} tok/s incl. compile)")
+    print("sample continuation ids:", np.asarray(out[0, :10]))
+
+
+if __name__ == "__main__":
+    main()

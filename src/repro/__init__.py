@@ -1,0 +1,4 @@
+"""repro — production-grade JAX framework for multi-level norm-ball projection
+(Perez & Barlaud 2024) with structured-sparsity training at pod scale."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""repro.configs — architecture registry + config dataclasses."""
+from .registry import ARCHS, ASSIGNED, get_arch, smoke_config  # noqa: F401
+from .types import (  # noqa: F401
+    ArchConfig, HybridConfig, MLAConfig, MoEConfig, ProjectionSpec, SHAPES,
+    ShapeConfig, SSMConfig, TrainConfig, XLSTMConfig,
+)

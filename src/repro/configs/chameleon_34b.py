@@ -1,0 +1,7 @@
+"""--arch chameleon-34b — see registry.py for the full definition."""
+
+from .registry import get_arch, smoke_config
+
+ARCH_ID = "chameleon-34b"
+CONFIG = get_arch(ARCH_ID)
+SMOKE = smoke_config(ARCH_ID)

@@ -1,0 +1,7 @@
+"""--arch sae-paper — see registry.py for the full definition."""
+
+from .registry import get_arch, smoke_config
+
+ARCH_ID = "sae-paper"
+CONFIG = get_arch(ARCH_ID)
+SMOKE = smoke_config(ARCH_ID)

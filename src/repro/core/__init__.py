@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: bi-/multi-level norm-ball projections."""
+
+from .ball import (  # noqa: F401
+    ball_norm,
+    norm_reduce,
+    project_ball,
+    project_l1,
+    project_l1_bisect,
+    project_l1_sort,
+    project_l2,
+    project_linf,
+    project_simplex,
+)
+from .bilevel import (  # noqa: F401
+    bilevel_l11,
+    bilevel_l12,
+    bilevel_l1inf,
+    bilevel_l21,
+    bilevel_project,
+    bilevel_project_axes,
+)
+from .exact_l1inf import (  # noqa: F401
+    l1inf_norm,
+    project_l1inf_exact,
+    project_l1inf_exact_bisect,
+)
+from .masks import apply_mask, column_mask, element_sparsity, mask_tree, sparsity  # noqa: F401
+from .multilevel import (  # noqa: F401
+    multilevel_norm,
+    multilevel_project,
+    trilevel_l111,
+    trilevel_l1infinf,
+    work_depth,
+)
+from .sharded import (  # noqa: F401
+    bilevel_project_sharded,
+    make_sharded_bilevel,
+    trilevel_project_sharded,
+)

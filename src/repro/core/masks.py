@@ -1,0 +1,44 @@
+"""Structured-sparsity masks + double-descent support (paper Appendix B, Alg 8).
+
+After a projection, whole columns (groups) are exactly zero. ``column_mask``
+extracts the kept-column indicator; ``sparsity`` reports the paper's metric
+(% of columns entirely zeroed). ``apply_mask`` freezes zeros for the second
+descent of the double-descent schedule (mask ⊙ weights and mask ⊙ grads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def column_mask(x: jax.Array, axis: int = 0, tol: float = 0.0) -> jax.Array:
+    """1.0 where the column (reduced over ``axis``) has any surviving weight."""
+    alive = jnp.max(jnp.abs(x), axis=axis) > tol
+    return alive.astype(x.dtype)
+
+
+def sparsity(x: jax.Array, axis: int = 0, tol: float = 0.0) -> jax.Array:
+    """Paper's sparsity score: % of columns set entirely to zero."""
+    alive = jnp.max(jnp.abs(x), axis=axis) > tol
+    return 100.0 * (1.0 - jnp.mean(alive.astype(jnp.float32)))
+
+
+def element_sparsity(x: jax.Array, tol: float = 0.0) -> jax.Array:
+    """% of individual weights that are zero (unstructured sparsity)."""
+    return 100.0 * jnp.mean((jnp.abs(x) <= tol).astype(jnp.float32))
+
+
+def mask_tree(params, axis: int = 0, tol: float = 0.0):
+    """Column-mask every >=2-D leaf of a param pytree (1-D leaves get ones)."""
+    def one(p):
+        if p.ndim >= 2:
+            m = column_mask(p, axis=axis, tol=tol)
+            return jnp.broadcast_to(jnp.expand_dims(m, axis), p.shape)
+        return jnp.ones_like(p)
+    return jax.tree_util.tree_map(one, params)
+
+
+def apply_mask(tree, masks):
+    """Elementwise freeze: used on both weights and grads in descent #2."""
+    return jax.tree_util.tree_map(lambda p, m: p * m, tree, masks)

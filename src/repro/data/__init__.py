@@ -1,0 +1,5 @@
+"""repro.data — deterministic shardable pipelines + paper datasets."""
+from .pipeline import (  # noqa: F401
+    DataConfig, DataPipeline, TokenFileReader, classification_synthetic,
+    lung_like,
+)

@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention (forward) — blockwise online softmax.
+
+Used by the serving/prefill path on real TPUs (the dry-run and CPU tests use
+the pure-jnp chunked oracle; see models/layers.py `attention_impl`).
+
+Layout: q (B, Hq, Sq, D), k/v (B, Hkv, Sk, D) with GQA group = Hq // Hkv
+resolved inside the BlockSpec index maps (no kv repetition in HBM!).
+
+Grid: (B, Hq, Sq/block_q, Sk/block_k) — the k axis is last (sequential on
+TPU), carrying the running max/denominator/accumulator in VMEM scratch.
+Causal/windowed blocks that are fully masked are skipped with pl.when — for
+causal attention this halves the compute (matches FlashAttention-2 behaviour).
+
+Alignment: block_q/block_k multiples of 128 (lane), head dim is the minor-most
+axis of every tile; pad D to a multiple of 128 outside for peak MXU mapping.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, sq: int, sk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_start = iq * block_q + (sk - sq)  # right-aligned absolute q positions
+    k_start = ik * block_k
+
+    # --- block-level culling (causal / window) -------------------------------
+    run = True
+    if causal:
+        run = jnp.asarray(k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, jnp.asarray(k_start + block_k - 1 > q_start - window))
+    if not causal and window is None:
+        run = jnp.asarray(True)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        # zero the ragged k/v tail: p is 0 there, but 0 * pad-NaN would poison acc
+        kv_valid = (k_start + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)) < sk
+        v = jnp.where(kv_valid, v, 0.0)
+        k = jnp.where(kv_valid, k, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < sk  # ragged tail
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                      # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                      # (block_q, block_k)
+        corr = jnp.exp(m_prev - m_new)              # (block_q, 1)
+        l_new = corr * l_ref[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_ref[:, 0:1]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """Blockwise attention forward. q (B,Hq,Sq,D); k,v (B,Hkv,Sk,D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    grid = (b, hq, pl.cdiv(sq, block_q), pl.cdiv(sk, block_k))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=sq, sk=sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

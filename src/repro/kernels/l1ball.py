@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: ℓ1-ball projection of a vector by bisection.
+
+The outer step of the bi-level projection. Serial-optimal algorithms
+(Condat/Michelot) do not map to the VPU; bisection does — each iteration is an
+elementwise soft-threshold + a tree reduction, all inside VMEM (DESIGN.md §3).
+
+Single-block kernel: the whole (padded) vector lives in VMEM. That covers the
+aggregate vectors of every assigned architecture (d_ff ≤ 25600, experts ≤ 384,
+vocab ≤ 163840 → ≤ 640 KB f32). ``ops.py`` falls back to the jnp path for
+anything larger.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ITERS = 64
+_LANE = 128
+
+
+def _l1ball_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: int):
+    v = v_ref[...]  # (1, n_pad)
+    radius = radius_ref[0]
+    ids = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    valid = ids < n_total
+    a = jnp.where(valid, jnp.abs(v), 0.0)
+
+    inside = jnp.sum(a) <= radius
+
+    def body(_, loh):
+        lo, hi = loh
+        mid = 0.5 * (lo + hi)
+        phi = jnp.sum(jnp.maximum(a - mid, 0.0))
+        too_small = phi > radius
+        lo = jnp.where(too_small, mid, lo)
+        hi = jnp.where(too_small, hi, mid)
+        return lo, hi
+
+    lo0 = jnp.zeros((), v.dtype)
+    hi0 = jnp.max(a)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    theta = jnp.where(inside, jnp.zeros((), v.dtype), 0.5 * (lo + hi))
+    out_ref[...] = jnp.sign(v) * jnp.maximum(a - theta, 0.0)
+
+
+def project_l1_pallas(v: jax.Array, radius, *, iters: int = _ITERS,
+                      interpret: bool = False) -> jax.Array:
+    """Project a 1-D vector onto the ℓ1 ball of ``radius`` (bisection, VMEM)."""
+    (n,) = v.shape
+    n_pad = max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE)
+    v2 = jnp.zeros((1, n_pad), v.dtype).at[0, :n].set(v)
+    r = jnp.asarray(radius, v.dtype).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_l1ball_kernel, n_total=n, iters=iters),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), v.dtype),
+        interpret=interpret,
+    )(v2, r)
+    return out[0, :n]

@@ -1,0 +1,53 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas()`` is True only on real TPU devices; the CPU container (tests,
+dry-run) uses interpret mode when asked explicitly and the jnp oracles
+otherwise, so lowering for the 512-device dry-run never requires Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bilevel_l1inf import clip_pallas, colmax_pallas
+from .flash_attention import flash_attention
+from .l1ball import project_l1_pallas
+
+# vectors larger than this stay on the jnp path (single-block VMEM kernel limit)
+_L1_KERNEL_MAX = 512 * 1024
+
+
+def use_pallas() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "force"))
+def bilevel_l1inf(y: jax.Array, radius, *, interpret: bool = False,
+                  force: bool = False) -> jax.Array:
+    """Bi-level ℓ1,∞ projection — Pallas on TPU, jnp oracle elsewhere.
+
+    ``force=True`` routes through the kernels regardless of platform
+    (with ``interpret=True`` on CPU: the per-kernel correctness tests).
+    """
+    if force or use_pallas():
+        v = colmax_pallas(y, interpret=interpret)
+        if v.shape[0] <= _L1_KERNEL_MAX:
+            u = project_l1_pallas(v, radius, interpret=interpret)
+        else:
+            u = ref.project_l1_ref(v, radius)
+        return clip_pallas(y, u, interpret=interpret)
+    return ref.bilevel_l1inf_ref(y, radius)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret", "force"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              interpret: bool = False, force: bool = False):
+    """Flash attention fwd — Pallas on TPU, chunked-jnp oracle elsewhere."""
+    if force or use_pallas():
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)

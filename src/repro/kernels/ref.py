@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ball
+
+
+def colmax_ref(y: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(y), axis=0)
+
+
+def clip_ref(y: jax.Array, u: jax.Array) -> jax.Array:
+    return jnp.clip(y, -u[None, :].astype(y.dtype), u[None, :].astype(y.dtype))
+
+
+def project_l1_ref(v: jax.Array, radius) -> jax.Array:
+    return ball.project_l1(v, radius, method="bisect")
+
+
+def bilevel_l1inf_ref(y: jax.Array, radius) -> jax.Array:
+    v = colmax_ref(y)
+    u = ball.project_l1(v, radius, method="bisect")
+    return clip_ref(y, u)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Reference multi-head attention: q,k,v are (B, H, S, D) (H may differ for
+    kv with GQA — callers repeat kv heads before this oracle)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+For each cell this prints/records compiled.memory_analysis() (fits?),
+cost_analysis() (FLOPs/bytes for §Roofline), and the HLO collective schedule.
+The two required meshes: 16×16 single pod, 2×16×16 multi-pod (the 'pod' axis
+must shard). Results are streamed to  <out>/<arch>__<shape>__<mesh>.json so a
+crashed/killed sweep resumes where it left off (--resume).
+"""
+
+import argparse
+import gzip
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.configs.types import SHAPES
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RF
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             verbose: bool = True):
+    cfg = registry.get_arch(arch)
+    shape = SHAPES[shape_name]
+    skip = SP.cell_skipped(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "time": time.time()}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = SP.build_cell(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(cell["fn"],
+                             in_shardings=cell["in_shardings"],
+                             out_shardings=cell["out_shardings"],
+                             donate_argnums=cell["donate"] or None)
+            lowered = jitted.lower(*cell["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            hlo_text = compiled.as_text()
+            roof = RF.analyze(compiled, chips, hlo_text=hlo_text)
+        # cache the SPMD HLO so the cost model can be re-run offline
+        hdir = os.path.join(out_dir, "hlo")
+        os.makedirs(hdir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hdir, f"{arch}__{shape_name}__{mesh_kind}.txt.gz"), "wt") as f:
+            f.write(hlo_text)
+
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            chips=chips,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            roofline=roof.as_dict(),
+        )
+        # analytic MODEL_FLOPS for the useful-compute ratio
+        tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
+            else shape.global_batch
+        napi = _param_count(cfg)
+        rec["model_flops"] = RF.model_flops(
+            napi["active"], tokens, "train" if shape.kind == "train" else "serve")
+        rec["params_total"] = napi["total"]
+        rec["params_active"] = napi["active"]
+        rec["useful_ratio"] = (rec["model_flops"] / roof.flops_global
+                               if roof.flops_global else None)
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"mem/dev={_fmt_bytes(_per_dev_bytes(rec))} "
+                  f"terms: C={roof.t_compute*1e3:.1f}ms "
+                  f"M={roof.t_memory*1e3:.1f}ms "
+                  f"K={roof.t_collective*1e3:.1f}ms -> {roof.bottleneck}")
+    except Exception as e:  # noqa: BLE001 - report and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] FAIL {rec['error']}",
+                  file=sys.stderr)
+    return rec
+
+
+def _param_count(cfg):
+    from repro import models
+    from repro.models import params as PM
+    tpl = models.get(cfg).template(cfg)
+    total = PM.count_params(tpl)
+    active = total
+    if cfg.moe is not None:
+        # subtract inactive routed experts
+        mo = cfg.moe
+        n_moe_layers = cfg.n_layers - mo.first_dense
+        per_expert = 3 * cfg.d_model * mo.d_expert
+        inactive = n_moe_layers * (mo.n_experts - mo.top_k) * per_expert
+        active = total - inactive
+    return {"total": int(total), "active": int(active)}
+
+
+def _per_dev_bytes(rec):
+    m = rec.get("memory", {})
+    # memory_analysis is already per-device for SPMD executables
+    vals = [v for k, v in m.items() if isinstance(v, (int, float))
+            and k in ("argument_bytes", "temp_bytes")]
+    return sum(vals) if vals else 0
+
+
+def _fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned archs)")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose json already exists")
+    args = ap.parse_args()
+
+    archs = registry.ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh_kind}.json")
+                if args.resume and os.path.exists(path):
+                    continue
+                rec = run_cell(arch, shape, mesh_kind, args.out)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"dry-run sweep done: {n_ok} ok/skip, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

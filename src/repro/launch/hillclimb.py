@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower a train cell with a named Tuning variant
+and record the roofline delta vs baseline.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell kimi_ep \
+        --out experiments/hillclimb
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.configs.types import SHAPES
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RF
+
+# (arch, shape, variant-name, Tuning overrides)
+VARIANTS = {
+    # ---- cell A: kimi-k2 train_4k (most collective-bound baseline) ----
+    "kimi_ep2d": ("kimi-k2-1t-a32b", "train_4k", dict(ep_2d=True)),
+    "kimi_scatter": ("kimi-k2-1t-a32b", "train_4k", dict(moe_dispatch="scatter")),
+    "kimi_ep2d_scatter": ("kimi-k2-1t-a32b", "train_4k",
+                          dict(ep_2d=True, moe_dispatch="scatter")),
+    "kimi_ep2d_scatter_mb32": ("kimi-k2-1t-a32b", "train_4k",
+                               dict(ep_2d=True, moe_dispatch="scatter",
+                                    microbatch=32)),
+    # ---- cell B: xlstm train_4k (worst compute fraction) ----
+    "xlstm_chunk128": ("xlstm-1.3b", "train_4k", dict(xlstm_chunk=128)),
+    "xlstm_chunk256": ("xlstm-1.3b", "train_4k", dict(xlstm_chunk=256)),
+    "xlstm_chunk512": ("xlstm-1.3b", "train_4k", dict(xlstm_chunk=512)),
+    # ---- cell C: stablelm train_4k (paper-representative: projection on) ----
+    "stablelm_probsbf16": ("stablelm-1.6b", "train_4k",
+                           dict(attn_probs_bf16=True)),
+    "stablelm_chunk2048": ("stablelm-1.6b", "train_4k", dict(attn_chunk=2048)),
+    "stablelm_probsbf16_c2048": ("stablelm-1.6b", "train_4k",
+                                 dict(attn_probs_bf16=True, attn_chunk=2048)),
+    "stablelm_mb64": ("stablelm-1.6b", "train_4k",
+                      dict(attn_probs_bf16=True, microbatch=64)),
+    "kimi_scatter_mb32": ("kimi-k2-1t-a32b", "train_4k",
+                          dict(moe_dispatch="scatter", microbatch=32)),
+    "kimi_scatter_mb64": ("kimi-k2-1t-a32b", "train_4k",
+                          dict(moe_dispatch="scatter", microbatch=64)),
+    "xlstm_chunk128_mb64": ("xlstm-1.3b", "train_4k",
+                            dict(xlstm_chunk=128, microbatch=64)),
+    "xlstm_shard_r": ("xlstm-1.3b", "train_4k", dict(xlstm_shard_r=True)),
+    "xlstm_shard_r_chunk128": ("xlstm-1.3b", "train_4k",
+                               dict(xlstm_shard_r=True, xlstm_chunk=128)),
+    # beyond-paper for the deepseek prefill dispatch blow-up
+    "deepseek_scatter": ("deepseek-v3-671b", "train_4k",
+                         dict(moe_dispatch="scatter")),
+}
+
+
+def run_variant(name, out_dir):
+    arch, shape_name, overrides = VARIANTS[name]
+    cfg = registry.get_arch(arch)
+    shape = SHAPES[shape_name]
+    tune = dataclasses.replace(SP.tuning_for(cfg), **overrides)
+    mesh = make_production_mesh()
+    t0 = time.time()
+    cell = SP.build_cell(cfg, shape, mesh, tune=tune)
+    with mesh:
+        jitted = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                         out_shardings=cell["out_shardings"],
+                         donate_argnums=cell["donate"] or None)
+        compiled = jitted.lower(*cell["args"]).compile()
+        mem = compiled.memory_analysis()
+        roof = RF.analyze(compiled, mesh.devices.size)
+    rec = dict(
+        variant=name, arch=arch, shape=shape_name,
+        overrides={k: str(v) for k, v in overrides.items()},
+        compile_s=round(time.time() - t0, 1),
+        memory={"argument_bytes": mem.argument_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes},
+        roofline=roof.as_dict(),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    rf = rec["roofline"]
+    print(f"[{name}] C={rf['t_compute']*1e3:.0f}ms M={rf['t_memory']*1e3:.0f}ms "
+          f"K={rf['t_collective']*1e3:.0f}ms temp/dev="
+          f"{mem.temp_size_in_bytes/2**30:.1f}GB -> {rf['bottleneck']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    help="variant name or 'all' or comma list")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    names = list(VARIANTS) if args.cell == "all" else args.cell.split(",")
+    fails = 0
+    for n in names:
+        try:
+            run_variant(n, args.out)
+        except Exception as e:  # noqa: BLE001
+            fails += 1
+            print(f"[{n}] FAIL {type(e).__name__}: {e}", file=sys.stderr)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,118 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 50 --mesh 1x1 --ckpt /tmp/run1
+
+On a real TPU slice run without --smoke and with the pod mesh (e.g.
+--mesh 16x16). The launcher owns: mesh construction, sharded state init (or
+elastic restore from the latest checkpoint), the data pipeline, async
+checkpointing, straggler monitoring hooks, and the projection constraint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs import registry
+from repro.configs.types import ProjectionSpec, TrainConfig
+from repro.data import DataConfig, DataPipeline
+from repro.models import params as PM
+from repro.parallel import sharding as SH
+from repro.runtime import CheckpointManager, StragglerMonitor
+from repro.training import init_state, make_train_step
+from repro.optim.projection_hook import tree_sparsity
+
+
+def parse_mesh(spec: str):
+    dims = [int(x) for x in spec.split("x")]
+    if len(dims) == 2:
+        return jax.make_mesh(tuple(dims), ("data", "model"))
+    return jax.make_mesh(tuple(dims), ("pod", "data", "model"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--radius", type=float, default=0.0,
+                    help=">0 enables the bi-level l1,inf constraint")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = (registry.smoke_config(args.arch) if args.smoke
+           else registry.get_arch(args.arch))
+    api = models.get(cfg)
+    mesh = parse_mesh(args.mesh)
+    micro = args.microbatch or args.batch
+    proj = None
+    if args.radius > 0:
+        proj = ProjectionSpec(pattern=r"(w_up|w_gate)", radius=args.radius)
+    tcfg = TrainConfig(microbatch=micro, lr=args.lr, total_steps=args.steps,
+                       warmup=min(20, args.steps // 5 + 1), remat=not args.smoke,
+                       master_dtype="", projection=proj,
+                       checkpoint_every=args.ckpt_every)
+
+    pipe = DataPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq + 1,
+                                   global_batch=args.batch, microbatch=micro))
+    rules = SH.param_rules(mesh)
+    specs = PM.param_specs(api.template(cfg), rules, SH.mesh_shape_dict(mesh))
+    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    mon = StragglerMonitor(n_hosts=jax.process_count())
+
+    state, start = None, 0
+    if mgr:
+        state, manifest = mgr.restore(shardings=None)
+        if state is not None:
+            start = manifest["step"]
+            print(f"[elastic restart] resuming from step {start}")
+    if state is None:
+        state = init_state(cfg, tcfg, api, jax.random.PRNGKey(tcfg.seed))
+    with mesh:
+        state = {"params": jax.device_put(state["params"],
+                                          SH.named(mesh, specs)),
+                 "opt": state["opt"]}
+        b_ax = SH.batch_axes(mesh)
+        act_spec = P(b_ax if len(b_ax) > 1 else b_ax[0], None, None)
+        step_fn = jax.jit(make_train_step(
+            cfg, tcfg, api, impl="naive" if args.smoke else "chunked",
+            n_groups=SH.dp_shards(mesh), act_spec=act_spec))
+
+        for step in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = {"tokens": jnp.asarray(pipe.batch(step))}
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            rep = mon.record({jax.process_index(): time.perf_counter() - t0})
+            if mgr and (step + 1) % tcfg.checkpoint_every == 0:
+                mgr.save_async(step + 1, state)
+            if (step + 1) % 10 == 0 or step + 1 == args.steps:
+                msg = (f"step {step + 1:5d} loss {float(metrics['loss']):.4f} "
+                       f"gnorm {float(metrics['grad_norm']):.2f}")
+                if rep.action != "none":
+                    msg += f"  [straggler watch: {rep.stragglers}]"
+                print(msg)
+    if mgr:
+        mgr.save(args.steps, state)
+        mgr.wait()
+    if proj:
+        for name, sp in tree_sparsity(state["params"], proj).items():
+            print(f"column sparsity {name}: {float(sp):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""repro.models — unified API over all assigned architecture families.
+
+    api = models.get(cfg)        # family-dispatched function bundle
+    params = params.init_params(api.template(cfg), key, dtype)
+    logits, aux = api.forward(params, tokens, cfg, ...)
+    cache = api.make_cache(cfg, batch, max_len)      (None for train-only SAE)
+    logits, cache = api.decode_step(params, toks, cache, pos, cfg)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.configs.types import ArchConfig
+from . import lm, params, sae, whisper, xlstm, zamba  # noqa: F401
+from . import layers  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    template: Callable
+    forward: Callable
+    make_cache: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+
+
+def get(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelAPI(lm.template, lm.forward, lm.make_cache, lm.decode_step)
+    if fam == "audio":
+        return ModelAPI(whisper.template, whisper.forward, whisper.make_cache,
+                        whisper.decode_step)
+    if fam == "ssm":
+        return ModelAPI(xlstm.template, xlstm.forward,
+                        lambda cfg, b, _len, dtype=None: xlstm.make_state(cfg, b),
+                        xlstm.decode_step)
+    if fam == "hybrid":
+        return ModelAPI(zamba.template, zamba.forward, zamba.make_cache,
+                        zamba.decode_step)
+    if fam == "sae":
+        return ModelAPI(sae.template, sae.forward)
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,59 @@
+"""Supervised AutoEncoder of the paper (§7.3): the original application of the
+bi-level projection.
+
+Encoder d → h → k (latent dim == #classes, used directly as logits);
+symmetric decoder k → h → d. Loss = α·Huber(x, x̂) + CE(y, z), trained under
+the hard constraint ‖W‖ ≤ η enforced by projection (double descent lives in
+runtime/double_descent.py). SiLU or ReLU activation per the paper's tables.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ArchConfig
+from .params import ParamDef
+
+
+def template(cfg: ArchConfig):
+    d, h, k = cfg.d_model, cfg.d_ff, cfg.vocab  # vocab doubles as n_classes
+    return {
+        "enc1": {"w": ParamDef((d, h), ("embed", "ffn"), "scaled"),
+                 "b": ParamDef((h,), (None,), "zeros")},
+        "enc2": {"w": ParamDef((h, k), ("ffn", None), "scaled"),
+                 "b": ParamDef((k,), (None,), "zeros")},
+        "dec1": {"w": ParamDef((k, h), (None, "ffn"), "scaled"),
+                 "b": ParamDef((h,), (None,), "zeros")},
+        "dec2": {"w": ParamDef((h, d), ("ffn", "embed"), "scaled"),
+                 "b": ParamDef((d,), (None,), "zeros")},
+    }
+
+
+def _act(x, kind):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.relu(x)
+
+
+def forward(params, x, cfg: ArchConfig, *, act: str = "silu", **_):
+    """x (B, d) -> (latent logits (B, k), reconstruction (B, d))."""
+    h = _act(x @ params["enc1"]["w"] + params["enc1"]["b"], act)
+    z = h @ params["enc2"]["w"] + params["enc2"]["b"]
+    h2 = _act(z @ params["dec1"]["w"] + params["dec1"]["b"], act)
+    xr = h2 @ params["dec2"]["w"] + params["dec2"]["b"]
+    return z, xr
+
+
+def huber(x, y, delta: float = 1.0):
+    r = jnp.abs(x - y)
+    return jnp.mean(jnp.where(r < delta, 0.5 * r * r, delta * (r - 0.5 * delta)))
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, alpha: float = 1.0,
+            act: str = "silu"):
+    """Paper eq. (18): α·ψ(X, X̂) + H(Y, Z)."""
+    x, y = batch["x"], batch["y"]
+    z, xr = forward(params, x, cfg, act=act)
+    rec = huber(x, xr)
+    logp = jax.nn.log_softmax(z.astype(jnp.float32))
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return alpha * rec + ce, {"rec": rec, "ce": ce}

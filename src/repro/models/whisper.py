@@ -1,0 +1,190 @@
+"""Whisper-large-v3 backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv/mel audio frontend is a STUB per the assignment: ``input_specs``
+provides pre-computed frame embeddings (B, enc_frames, d_model). Learned
+absolute positions, LayerNorm (scale+bias), GELU MLP, MHA with biases —
+matching the original architecture. Decoder positions are sized for the
+largest assigned shape (32k); the real model's 448 is noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ArchConfig
+from . import layers as L
+from .params import ParamDef
+
+DEC_POS_MAX = 32768
+
+
+def _attn_t(cfg: ArchConfig, n: int, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((n, d, cfg.n_heads, hd), ("layers", "embed", "heads", None),
+                       "scaled"),
+        "bq": ParamDef((n, cfg.n_heads, hd), ("layers", "heads", None), "zeros"),
+        "wk": ParamDef((n, d, cfg.n_kv_heads, hd),
+                       ("layers", "embed", "kv_heads", None), "scaled"),
+        "wv": ParamDef((n, d, cfg.n_kv_heads, hd),
+                       ("layers", "embed", "kv_heads", None), "scaled"),
+        "bv": ParamDef((n, cfg.n_kv_heads, hd), ("layers", "kv_heads", None), "zeros"),
+        "wo": ParamDef((n, cfg.n_heads, hd, d), ("layers", "heads", None, "embed"),
+                       "scaled"),
+        "bo": ParamDef((n, d), ("layers", None), "zeros"),
+    }
+
+
+def _mlp_t(cfg: ArchConfig, n: int):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_up": ParamDef((n, d, f), ("layers", "embed", "ffn"), "scaled"),
+        "b_up": ParamDef((n, f), ("layers", "ffn"), "zeros"),
+        "w_down": ParamDef((n, f, d), ("layers", "ffn", "embed"), "scaled"),
+        "b_down": ParamDef((n, d), ("layers", None), "zeros"),
+    }
+
+
+def _ln_t(cfg, n, name):
+    return {
+        f"{name}_s": ParamDef((n, cfg.d_model), ("layers", None), "ones"),
+        f"{name}_b": ParamDef((n, cfg.d_model), ("layers", None), "zeros"),
+    }
+
+
+def template(cfg: ArchConfig):
+    d = cfg.d_model
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    enc = {"attn": _attn_t(cfg, ne), "mlp": _mlp_t(cfg, ne),
+           **_ln_t(cfg, ne, "ln1"), **_ln_t(cfg, ne, "ln2")}
+    dec = {"self": _attn_t(cfg, nd), "cross": _attn_t(cfg, nd),
+           "mlp": _mlp_t(cfg, nd), **_ln_t(cfg, nd, "ln1"),
+           **_ln_t(cfg, nd, "ln15"), **_ln_t(cfg, nd, "ln2")}
+    return {
+        "embed": ParamDef((cfg.vocab, d), ("vocab", "embed"), "normal", 0.02),
+        "pos_enc": ParamDef((cfg.enc_frames, d), (None, "embed"), "normal", 0.01),
+        "pos_dec": ParamDef((DEC_POS_MAX, d), (None, "embed"), "normal", 0.01),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm_s": ParamDef((d,), (None,), "ones"),
+        "enc_norm_b": ParamDef((d,), (None,), "zeros"),
+        "dec_norm_s": ParamDef((d,), (None,), "ones"),
+        "dec_norm_b": ParamDef((d,), (None,), "zeros"),
+    }
+
+
+def _ln(x, p, name, eps):
+    return L.layer_norm(x, p[f"{name}_s"], p[f"{name}_b"], eps)
+
+
+def _mha(lp, hq, hkv, *, causal, impl, q_offset=0):
+    q = jnp.einsum("bsd,dhk->bshk", hq, lp["wq"]) + lp["bq"][None, None]
+    k = jnp.einsum("bsd,dhk->bshk", hkv, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hkv, lp["wv"]) + lp["bv"][None, None]
+    o = L.attention(q, k, v, causal=causal, impl=impl, q_offset=q_offset)
+    return jnp.einsum("bshk,hkd->bsd", o, lp["wo"]) + lp["bo"][None, None]
+
+
+def _mlp(lp, x):
+    return jax.nn.gelu(x @ lp["w_up"] + lp["b_up"]) @ lp["w_down"] + lp["b_down"]
+
+
+def encode(params, frames, cfg: ArchConfig, *, impl="chunked", remat=True):
+    """frames (B, F, d) stub embeddings -> encoder states (B, F, d)."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]].astype(frames.dtype)
+
+    def body(x, lp):
+        def fn(p, h):
+            hn = _ln(h, p, "ln1", cfg.norm_eps)
+            h = h + _mha(p["attn"], hn, hn, causal=False, impl=impl)
+            return h + _mlp(p["mlp"], _ln(h, p, "ln2", cfg.norm_eps))
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.layer_norm(x, params["enc_norm_s"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, frames=None, impl="chunked",
+            remat=True, act_spec=None, **_):
+    """Teacher-forced decoder over ``tokens`` with encoder on ``frames``."""
+    b, s = tokens.shape
+    if frames is None:  # smoke/train convenience: zero audio
+        frames = jnp.zeros((b, cfg.enc_frames, cfg.d_model),
+                           params["embed"].dtype)
+    enc = encode(params, frames, cfg, impl=impl, remat=remat)
+    x = params["embed"][tokens] + params["pos_dec"][None, :s].astype(
+        params["embed"].dtype)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+        enc = jax.lax.with_sharding_constraint(enc, act_spec)
+
+    def body(x, lp):
+        def fn(p, h):
+            h = h + _mha(p["self"], _ln(h, p, "ln1", cfg.norm_eps),
+                         _ln(h, p, "ln1", cfg.norm_eps), causal=True, impl=impl)
+            h = h + _mha(p["cross"], _ln(h, p, "ln15", cfg.norm_eps), enc,
+                         causal=False, impl=impl)
+            return h + _mlp(p["mlp"], _ln(h, p, "ln2", cfg.norm_eps))
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.layer_norm(x, params["dec_norm_s"], params["dec_norm_b"], cfg.norm_eps)
+    return x @ params["embed"].T, 0.0
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    n = cfg.n_layers
+    return {
+        "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # cross-attention K/V computed once at prefill from encoder states
+        "xk": jnp.zeros((n, batch, cfg.enc_frames, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((n, batch, cfg.enc_frames, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(params, tokens, cache, pos, cfg: ArchConfig, **_):
+    """One decoder token against self-cache + precomputed cross K/V."""
+    b = tokens.shape[0]
+    x = (params["embed"][tokens]
+         + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, 0)[0]
+         ).astype(params["embed"].dtype)[:, None]
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        h = _ln(x, lp, "ln1", cfg.norm_eps)[:, 0]
+        q = jnp.einsum("bd,dhk->bhk", h, lp["self"]["wq"]) + lp["self"]["bq"]
+        k = jnp.einsum("bd,dhk->bhk", h, lp["self"]["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, lp["self"]["wv"]) + lp["self"]["bv"]
+        kc = jax.lax.dynamic_update_slice(kc, k[:, None].astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, None].astype(vc.dtype),
+                                          (0, pos, 0, 0))
+        cur = jnp.full((b,), pos + 1, jnp.int32)
+        a = L.attention_decode(q, kc, vc, cur)
+        x = x + (jnp.einsum("bhk,hkd->bd", a, lp["self"]["wo"])
+                 + lp["self"]["bo"])[:, None]
+        # cross attention against the precomputed encoder K/V
+        h2 = _ln(x, lp, "ln15", cfg.norm_eps)[:, 0]
+        q2 = jnp.einsum("bd,dhk->bhk", h2, lp["cross"]["wq"]) + lp["cross"]["bq"]
+        cur2 = jnp.full((b,), xk.shape[1], jnp.int32)
+        a2 = L.attention_decode(q2, xk, xv, cur2)
+        x = x + (jnp.einsum("bhk,hkd->bd", a2, lp["cross"]["wo"])
+                 + lp["cross"]["bo"])[:, None]
+        x = x + _mlp(lp["mlp"], _ln(x, lp, "ln2", cfg.norm_eps))
+        return x, (kc, vc)
+
+    x, (knew, vnew) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    new_cache = dict(cache, k=knew, v=vnew)
+    x = L.layer_norm(x, params["dec_norm_s"], params["dec_norm_b"], cfg.norm_eps)
+    return (x[:, 0] @ params["embed"].T), new_cache

@@ -1,0 +1,326 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory).
+
+Layout for xlstm-1.3b: 48 layers in super-blocks of (slstm_every-1) mLSTM
+followed by 1 sLSTM, scanned over super-blocks. The mLSTM has both a
+*sequential* recurrence (the faithful formulation — also the decode path) and
+a *chunkwise-parallel* formulation (production path for training; validated
+against the sequential one in tests). Both use the exponential-gating
+stabilizer m_t from the paper.
+
+Gates are exp(i)/exp(f) with running max stabilization; the normalizer is
+max(|q·n|, exp(-m)) exactly as in the paper's Appendix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ArchConfig
+from . import layers as L
+from .params import ParamDef
+
+_NEG = -1e30
+
+
+# -------------------------------------------------------------------- mLSTM
+def mlstm_sequential(q, k, v, li, lf, state=None):
+    """q,k,v (b,s,h,d); li/lf (b,s,h) log gates. Returns y, final state.
+
+    state = (C (b,h,dk,dv), n (b,h,dk), m (b,h)).
+    """
+    b, s, h, d = q.shape
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    if state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), _NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)[..., None]
+        ip = jnp.exp(lit - m_new)[..., None]
+        C = C * fp[..., None] + ip[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * fp + ip * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        qn = jnp.einsum("bhd,bhd->bh", qt, n)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / denom
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (qf, kf, vf)) + tuple(
+        a.transpose(1, 0, 2) for a in (li.astype(jnp.float32), lf.astype(jnp.float32)))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, *, chunk: int, state=None):
+    """Chunkwise-parallel mLSTM — O(s·c) intra + O(s/c) recurrence."""
+    b, s, h, d = q.shape
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padq) for a in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=_NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    qf = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, nc, c, h, d)
+    kf = k.astype(jnp.float32).reshape(b, nc, c, h, d)
+    vf = v.astype(jnp.float32).reshape(b, nc, c, h, d)
+    lif = li.astype(jnp.float32).reshape(b, nc, c, h)
+    lff = lf.astype(jnp.float32).reshape(b, nc, c, h)
+
+    cumf = jnp.cumsum(lff, axis=2)                               # inclusive
+    # D[i,j] = cumf_i - cumf_j + li_j  (j <= i)
+    D = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + lif[:, :, None, :, :]
+    ii = jnp.arange(c)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    D = jnp.where(causal, D, _NEG)
+    m_intra = jnp.max(D, axis=3)                                 # (b,nc,c,h)
+    sdot = jnp.einsum("bzihd,bzjhd->bzijh", qf, kf)              # raw q·k scores
+
+    if state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), _NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        Cs, ns, ms = carry
+        qz, kz, vz, cumf_z, li_z, D_z, mi_z, sd_z = inp
+        m_i = jnp.maximum(mi_z, cumf_z + ms[:, None])            # (b,c,h)
+        w = jnp.exp(D_z - m_i[:, :, None])                       # (b,i,j,h)
+        num = jnp.einsum("bijh,bijh,bjhe->bihe", sd_z, w, vz)
+        qC = jnp.einsum("bihd,bhde->bihe", qz, Cs)
+        inter = jnp.exp(cumf_z + ms[:, None] - m_i)              # (b,c,h)
+        num = num + qC * inter[..., None]
+        qn = jnp.einsum("bijh,bijh->bih", sd_z, w)
+        qn = qn + jnp.einsum("bihd,bhd->bih", qz, ns) * inter
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))
+        y = num / denom[..., None]
+        # carry update to end of chunk
+        f_end = cumf_z[:, -1]                                    # (b,h)
+        g = f_end[:, None] - cumf_z + li_z                       # (b,c,h)
+        m_out = jnp.maximum(jnp.max(g, axis=1), f_end + ms)
+        wC = jnp.exp(g - m_out[:, None])                         # (b,c,h)
+        C_new = (Cs * jnp.exp(f_end + ms - m_out)[..., None, None]
+                 + jnp.einsum("bch,bchd,bche->bhde", wC, kz, vz))
+        n_new = (ns * jnp.exp(f_end + ms - m_out)[..., None]
+                 + jnp.einsum("bch,bchd->bhd", wC, kz))
+        return (C_new, n_new, m_out), y
+
+    xs = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), cumf.transpose(1, 0, 2, 3),
+          lif.transpose(1, 0, 2, 3), D.transpose(1, 0, 2, 3, 4),
+          m_intra.transpose(1, 0, 2, 3), sdot.transpose(1, 0, 2, 3, 4))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, d)
+    return y[:, :s].astype(q.dtype), (C, n, m)
+
+
+# ------------------------------------------------------------------ templates
+def _mlstm_template(cfg: ArchConfig, n: int):
+    d = cfg.d_model
+    di = int(d * cfg.xlstm.proj_factor)
+    h = cfg.n_heads
+    return {
+        "ln": ParamDef((n, d), ("layers", None), "ones"),
+        "w_up": ParamDef((n, d, 2 * di), ("layers", "embed", "ffn"), "scaled"),
+        # per-head block-diagonal q/k/v, as in the official mLSTM (di²/h each)
+        "wq": ParamDef((n, h, di // h, di // h), ("layers", "heads", None, None),
+                       "scaled"),
+        "wk": ParamDef((n, h, di // h, di // h), ("layers", "heads", None, None),
+                       "scaled"),
+        "wv": ParamDef((n, h, di // h, di // h), ("layers", "heads", None, None),
+                       "scaled"),
+        "w_gates": ParamDef((n, di, 2 * h), ("layers", "ffn", None), "scaled"),
+        "gn": ParamDef((n, di), ("layers", None), "ones"),
+        "w_down": ParamDef((n, di, d), ("layers", "ffn", "embed"), "scaled"),
+    }
+
+
+def _slstm_template(cfg: ArchConfig, n: int):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f = int(d * 4 / 3)
+    # shard_r: the recurrent matrices are re-read every timestep; TP-sharding
+    # their output dim divides that traffic by the model-axis size at the cost
+    # of one tiny (b·h·dh floats) all-gather of h_{t-1} per step.
+    r_axes = ("layers", None, "heads", None, "ffn") if cfg.xlstm.shard_r \
+        else ("layers", None, "heads", None, None)
+    return {
+        "ln": ParamDef((n, d), ("layers", None), "ones"),
+        "w_in": ParamDef((n, d, 4 * d), ("layers", "embed", "ffn"), "scaled"),
+        "r": ParamDef((n, 4, h, dh, dh), r_axes, "scaled"),
+        "gn": ParamDef((n, d), ("layers", None), "ones"),
+        "ln2": ParamDef((n, d), ("layers", None), "ones"),
+        "w_up": ParamDef((n, d, 2 * f), ("layers", "embed", "ffn"), "scaled"),
+        "w_down": ParamDef((n, f, d), ("layers", "ffn", "embed"), "scaled"),
+    }
+
+
+def template(cfg: ArchConfig):
+    xl = cfg.xlstm
+    n_super = cfg.n_layers // xl.slstm_every
+    n_m_per = xl.slstm_every - 1
+    return {
+        "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), "normal", 0.02),
+        "final_norm": ParamDef((cfg.d_model,), (None,), "ones"),
+        "unembed": ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"), "scaled"),
+        # (n_super, n_m_per, ...) double-stacked mLSTM params
+        "mlstm": {k: ParamDef((n_super,) + pd.shape, ("super",) + pd.axes,
+                              pd.init, pd.scale)
+                  for k, pd in _mlstm_template(cfg, n_m_per).items()},
+        "slstm": _slstm_template(cfg, n_super),
+    }
+
+
+# -------------------------------------------------------------------- applies
+def _mlstm_block(lp, x, cfg: ArchConfig, *, seq_mode: str, state=None):
+    d = cfg.d_model
+    di = int(d * cfg.xlstm.proj_factor)
+    h = cfg.n_heads
+    dh = di // h
+    b, s, _ = x.shape
+    hin = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    up = hin @ lp["w_up"]
+    xm, z = up[..., :di], up[..., di:]
+    xh = xm.reshape(b, s, h, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, lp["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, lp["wk"])
+    v = jnp.einsum("bshd,hde->bshe", xh, lp["wv"])
+    gates = (xm @ lp["w_gates"]).astype(jnp.float32)
+    li, lf = gates[..., :h], gates[..., h:]
+    lf = -jax.nn.softplus(-lf)  # log sigmoid forget gate
+    if seq_mode == "chunkwise":
+        y, st = mlstm_chunkwise(q, k, v, li, lf, chunk=cfg.xlstm.chunk, state=state)
+    else:
+        y, st = mlstm_sequential(q, k, v, li, lf, state=state)
+    y = y.reshape(b, s, di)
+    y = L.rms_norm(y, lp["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ lp["w_down"], st
+
+
+def _slstm_block(lp, x, cfg: ArchConfig, *, state=None):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    b, s, _ = x.shape
+    hin = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    gi = (hin @ lp["w_in"]).astype(jnp.float32).reshape(b, s, 4, h, dh)
+    if state is None:
+        c0 = jnp.zeros((b, h, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        h0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h, dh), _NEG, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+    r = lp["r"].astype(jnp.float32)  # (4, heads, dh, dh)
+
+    def step(carry, g):
+        c, n, hprev, m = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", hprev, r)
+        zt = jnp.tanh(g[:, 0] + rec[0])
+        it = g[:, 1] + rec[1]
+        ft = -jax.nn.softplus(-(g[:, 2] + rec[2]))  # log sigmoid
+        ot = jax.nn.sigmoid(g[:, 3] + rec[3])
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        hnew = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, hnew, m_new), hnew
+
+    (c0, n0, h0, m0), ys = jax.lax.scan(step, (c0, n0, h0, m0),
+                                        gi.transpose(1, 0, 2, 3, 4))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    x = x + L.rms_norm(y, lp["gn"], cfg.norm_eps)
+    # gated FFN (paper: proj factor 4/3)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    up = h2 @ lp["w_up"]
+    f = lp["w_down"].shape[0]
+    y2 = (jax.nn.silu(up[..., :f]) * up[..., f:]) @ lp["w_down"]
+    return x + y2, (c0, n0, h0, m0)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, seq_mode="chunkwise", remat=True,
+            act_spec=None, **_):
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(params["final_norm"].dtype)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+
+    def super_block(x, lp):
+        def m_body(x, mlp):
+            fn = lambda p, h: _mlstm_block(p, h, cfg=cfg, seq_mode=seq_mode)[0]
+            if remat:
+                fn = jax.checkpoint(fn)
+            return fn(mlp, x), None
+
+        x, _ = jax.lax.scan(m_body, x, lp["mlstm"])
+        x, _ = _slstm_block(lp["slstm"], x, cfg)
+        return x, None
+
+    stacked = {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+    x, _ = jax.lax.scan(super_block, x, stacked)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"], 0.0
+
+
+def make_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    """Recurrent decode state (the xLSTM 'cache'): O(1) in sequence length."""
+    xl = cfg.xlstm
+    n_super = cfg.n_layers // xl.slstm_every
+    n_m = xl.slstm_every - 1
+    d = cfg.d_model
+    di = int(d * xl.proj_factor)
+    h = cfg.n_heads
+    dh, dhs = di // h, d // h
+    return {
+        "mlstm_C": jnp.zeros((n_super, n_m, batch, h, dh, dh), jnp.float32),
+        "mlstm_n": jnp.zeros((n_super, n_m, batch, h, dh), jnp.float32),
+        "mlstm_m": jnp.full((n_super, n_m, batch, h), _NEG, jnp.float32),
+        "slstm_c": jnp.zeros((n_super, batch, h, dhs), jnp.float32),
+        "slstm_n": jnp.zeros((n_super, batch, h, dhs), jnp.float32),
+        "slstm_h": jnp.zeros((n_super, batch, h, dhs), jnp.float32),
+        "slstm_m": jnp.full((n_super, batch, h, dhs), _NEG, jnp.float32),
+    }
+
+
+def decode_step(params, tokens, state, pos, cfg: ArchConfig, **_):
+    """One token; state as from make_state. Returns (logits, new_state)."""
+    x = params["embed"][tokens][:, None].astype(params["final_norm"].dtype)
+
+    def super_block(x, xs):
+        lp, st = xs
+
+        def m_body(x, inp):
+            mlp, C, n, m = inp
+            y, (C2, n2, m2) = _mlstm_block(mlp, x, cfg, seq_mode="sequential",
+                                           state=(C, n, m))
+            return y, (C2, n2, m2)
+
+        x, (C2, n2, m2) = jax.lax.scan(
+            m_body, x, (lp["mlstm"], st["mlstm_C"], st["mlstm_n"], st["mlstm_m"]))
+        x, (c, n, h, m) = _slstm_block(
+            lp["slstm"], x, cfg,
+            state=(st["slstm_c"], st["slstm_n"], st["slstm_h"], st["slstm_m"]))
+        new = {"mlstm_C": C2, "mlstm_n": n2, "mlstm_m": m2,
+               "slstm_c": c, "slstm_n": n, "slstm_h": h, "slstm_m": m}
+        return x, new
+
+    stacked = ({"mlstm": params["mlstm"], "slstm": params["slstm"]}, state)
+    x, new_state = jax.lax.scan(super_block, x, stacked)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, 0] @ params["unembed"]), new_state

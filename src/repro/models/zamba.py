@@ -1,0 +1,205 @@
+"""Zamba2-7B (arXiv:2411.15242): Mamba2 backbone + ONE weight-shared
+attention+MLP block applied every ``attn_every`` layers.
+
+81 layers = 13 super-groups of (5 mamba + 1 shared-attn application) + 3
+trailing mamba layers. The shared block receives concat(x, x0) (original
+embeddings re-injected, as in Zamba) projected back to d_model; per-application
+LoRA specialization of the shared block is omitted (DESIGN.md §7).
+
+At sequence lengths >= hybrid.long_seq the shared attention switches to a
+sliding window (hybrid.window_at_long) — this is what makes the `long_500k`
+shape runnable with an O(window) cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ArchConfig
+from . import layers as L
+from .params import ParamDef
+
+
+def _n_groups_trailing(cfg: ArchConfig):
+    k = cfg.hybrid.attn_every
+    n_super = cfg.n_layers // k
+    trailing = cfg.n_layers - n_super * k
+    return n_super, k - 1, trailing
+
+
+def template(cfg: ArchConfig):
+    d = cfg.d_model
+    n_super, m_per, trailing = _n_groups_trailing(cfg)
+    mamba = lambda n: {k: v for k, v in L.mamba2_template(d, cfg.ssm).items()}
+
+    def stack(t, n):
+        return {k: ParamDef((n,) + pd.shape, ("layers",) + pd.axes, pd.init,
+                            pd.scale) for k, pd in t.items()}
+
+    hd = cfg.resolved_head_dim
+    shared = {
+        "w_concat": ParamDef((2 * d, d), ("embed", None), "scaled"),
+        "ln1": ParamDef((d,), (None,), "ones"),
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None), "scaled"),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None), "scaled"),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None), "scaled"),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", None, "embed"), "scaled"),
+        "ln2": ParamDef((d,), (None,), "ones"),
+        "mlp": L.mlp_template(d, cfg.d_ff, cfg.act),
+        "norm_m": ParamDef((d,), (None,), "ones"),
+    }
+    return {
+        "embed": ParamDef((cfg.vocab, d), ("vocab", "embed"), "normal", 0.02),
+        "final_norm": ParamDef((d,), (None,), "ones"),
+        "unembed": ParamDef((d, cfg.vocab), ("embed", "vocab"), "scaled"),
+        "mamba_norm": {
+            "super": ParamDef((n_super, m_per, d), ("layers", None, None), "ones"),
+            "trailing": ParamDef((trailing, d), ("layers", None), "ones"),
+        },
+        "mamba_super": {k: ParamDef((n_super,) + pd.shape, ("super",) + pd.axes,
+                                    pd.init, pd.scale)
+                        for k, pd in stack(mamba(0), m_per).items()},
+        "mamba_trailing": stack(mamba(0), trailing),
+        "shared": shared,
+    }
+
+
+def _shared_attn(sp, x, x0, cfg: ArchConfig, *, positions, impl, window,
+                 cache=None, pos=None):
+    """The weight-shared transformer block. Returns (x_out, new kv) ."""
+    h = jnp.concatenate([x, x0], axis=-1) @ sp["w_concat"]
+    hn = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+    hd = cfg.resolved_head_dim
+    if cache is None:
+        q = jnp.einsum("bsd,dhk->bshk", hn, sp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hn, sp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, sp["wv"])
+        freqs = L.rope_frequencies(hd, cfg.rope_pct, cfg.rope_theta, positions)
+        q, k = L.apply_rope(q, freqs), L.apply_rope(k, freqs)
+        a = L.attention(q, k, v, causal=True, window=window, impl=impl)
+        a = jnp.einsum("bshk,hkd->bsd", a, sp["wo"])
+        newkv = None
+    else:
+        b = x.shape[0]
+        hq = hn[:, 0]
+        q = jnp.einsum("bd,dhk->bhk", hq, sp["wq"])
+        k = jnp.einsum("bd,dhk->bhk", hq, sp["wk"])
+        v = jnp.einsum("bd,dhk->bhk", hq, sp["wv"])
+        posv = jnp.full((b,), pos, jnp.int32)
+        freqs = L.rope_frequencies(hd, cfg.rope_pct, cfg.rope_theta, posv)
+        fq = (freqs[0][:, None], freqs[1][:, None], freqs[2]) if freqs else None
+        q = L.apply_rope(q[:, None], fq)[:, 0]
+        k = L.apply_rope(k[:, None], fq)[:, 0]
+        t = cache["k"].shape[1]
+        slot = pos % t if window is not None else pos
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k[:, None].astype(cache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v[:, None].astype(cache["v"].dtype), (0, slot, 0, 0))
+        cur = jnp.full((b,), pos + 1, jnp.int32)
+        a = L.attention_decode(q, kc, vc, cur, window=window)[:, None]
+        a = jnp.einsum("bshk,hkd->bsd", a, sp["wo"])
+        newkv = {"k": kc, "v": vc}
+    h2 = h + a
+    y = L.mlp_apply(sp["mlp"], L.rms_norm(h2, sp["ln2"], cfg.norm_eps), cfg.act)
+    return x + a + y, newkv  # block delta re-joins the backbone stream
+
+
+def _window_for(cfg: ArchConfig, seq_len: int):
+    hy = cfg.hybrid
+    return hy.window_at_long if seq_len >= hy.long_seq else None
+
+
+def forward(params, tokens, cfg: ArchConfig, *, impl="chunked", remat=True,
+            act_spec=None, **_):
+    b, s = tokens.shape
+    x0 = params["embed"][tokens].astype(params["final_norm"].dtype)
+    if act_spec is not None:
+        x0 = jax.lax.with_sharding_constraint(x0, act_spec)
+    x = x0
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    window = _window_for(cfg, s)
+
+    def mamba_body(x, xs):
+        lp, norm = xs
+        fn = lambda p, h: L.mamba2_apply(p, L.rms_norm(h, norm, cfg.norm_eps),
+                                         cfg.ssm)[0] + h
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x), None
+
+    def super_block(x, xs):
+        lp, norms = xs
+        x, _ = jax.lax.scan(mamba_body, x, (lp, norms))
+        x, _ = _shared_attn(params["shared"], x, x0, cfg, positions=positions,
+                            impl=impl, window=window)
+        return x, None
+
+    x, _ = jax.lax.scan(super_block, x,
+                        (params["mamba_super"], params["mamba_norm"]["super"]))
+    x, _ = jax.lax.scan(mamba_body, x,
+                        (params["mamba_trailing"], params["mamba_norm"]["trailing"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"], 0.0
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Mamba recurrent states + kv ring caches for the 13 shared-attn sites."""
+    n_super, m_per, trailing = _n_groups_trailing(cfg)
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.expand * d
+    h = di // ssm.head_dim
+    gn = ssm.n_groups * ssm.d_state
+    window = _window_for(cfg, max_len)
+    t = min(max_len, window) if window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "conv_super": jnp.zeros((n_super, m_per, batch, ssm.d_conv, di + 2 * gn), dtype),
+        "ssm_super": jnp.zeros((n_super, m_per, batch, h, ssm.d_state,
+                                ssm.head_dim), jnp.float32),
+        "conv_trail": jnp.zeros((trailing, batch, ssm.d_conv, di + 2 * gn), dtype),
+        "ssm_trail": jnp.zeros((trailing, batch, h, ssm.d_state, ssm.head_dim),
+                               jnp.float32),
+        "k": jnp.zeros((n_super, batch, t, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_super, batch, t, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(params, tokens, cache, pos, cfg: ArchConfig, *, max_len=None, **_):
+    b = tokens.shape[0]
+    x0 = params["embed"][tokens][:, None].astype(params["final_norm"].dtype)
+    x = x0
+    window = _window_for(cfg, max_len or cache["k"].shape[2])
+    if window is not None and cache["k"].shape[2] < window:
+        window = cache["k"].shape[2]
+
+    def mamba_body(x, xs):
+        lp, norm, cs, ss = xs
+        y, (cs2, ss2) = L.mamba2_apply(lp, L.rms_norm(x, norm, cfg.norm_eps),
+                                       cfg.ssm, state=(cs, ss))
+        return x + y, (cs2, ss2)
+
+    def super_block(x, xs):
+        lp, norms, cs, ss, kc, vc = xs
+        x, (cs2, ss2) = jax.lax.scan(mamba_body, x, (lp, norms, cs, ss))
+        x, kv = _shared_attn(params["shared"], x, x0, cfg, positions=None,
+                             impl=None, window=window,
+                             cache={"k": kc, "v": vc}, pos=pos)
+        return x, (cs2, ss2, kv["k"], kv["v"])
+
+    x, (cs_s, ss_s, knew, vnew) = jax.lax.scan(
+        super_block, x,
+        (params["mamba_super"], params["mamba_norm"]["super"],
+         cache["conv_super"], cache["ssm_super"], cache["k"], cache["v"]))
+    x, (cs_t, ss_t) = jax.lax.scan(
+        mamba_body, x,
+        (params["mamba_trailing"], params["mamba_norm"]["trailing"],
+         cache["conv_trail"], cache["ssm_trail"]))
+    new_cache = {"conv_super": cs_s, "ssm_super": ss_s, "conv_trail": cs_t,
+                 "ssm_trail": ss_t, "k": knew, "v": vnew}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, 0] @ params["unembed"]), new_cache

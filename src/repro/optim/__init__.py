@@ -1,0 +1,12 @@
+"""repro.optim — AdamW (+ int8 moments), schedules, projection hook."""
+
+from .adamw import (  # noqa: F401
+    dequantize_blockwise,
+    global_norm,
+    init,
+    lr_schedule,
+    quantize_blockwise,
+    state_specs,
+    update,
+)
+from .projection_hook import apply_projection, project_tree, tree_sparsity  # noqa: F401

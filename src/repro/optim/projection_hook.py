@@ -1,0 +1,114 @@
+"""The paper's technique as a first-class training feature.
+
+``apply_projection(params, spec, step)`` applies the multi-level projection
+(core.multilevel) to every parameter whose path matches ``spec.pattern``,
+every ``spec.every`` steps (lax.cond — regex matching is trace-time static).
+
+The projection operates on the TRAILING ``sum(k for _, k in levels)`` axes of
+each matched leaf; leading axes ('layers', 'super', 'experts' stacks) are
+vmapped — e.g. a stacked MoE weight (L, E, d, f) with bi-level ν projects each
+(d, f) expert matrix independently, and ν=((inf,1),(inf,1),(1,1)) projects the
+(E, d, f) tensor tri-level per layer (head/expert-structured sparsity, §6 of
+the paper).
+
+Under pjit this is communication-minimal by construction (DESIGN.md §3): the
+q-norm aggregation reduces the FSDP-sharded axis (one small all-reduce), the
+ℓ1 solve runs on the tiny aggregate, the clip is local. core/sharded.py holds
+the explicit shard_map variant used by the hillclimb.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ProjectionSpec
+from repro.core import multilevel
+from repro.core.masks import sparsity
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _project_leaf(w, levels, radius, method, transpose=False):
+    need = sum(k for _, k in levels)
+
+    def core(x):
+        if transpose:
+            x = jnp.swapaxes(x, 0, -1) if need == 2 else jnp.transpose(
+                x, tuple(reversed(range(x.ndim))))
+        x = multilevel.multilevel_project(x, list(levels), radius, method)
+        if transpose:
+            x = jnp.swapaxes(x, 0, -1) if need == 2 else jnp.transpose(
+                x, tuple(reversed(range(x.ndim))))
+        return x
+
+    fn = core
+    for _ in range(w.ndim - need):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def project_tree(params, spec: ProjectionSpec):
+    """Unconditionally project matched leaves (jit-safe)."""
+    pat = re.compile(spec.pattern)
+    need = sum(k for _, k in spec.levels)
+
+    def one(path, w):
+        name = _path_str(path)
+        if w.ndim >= need and pat.search(name):
+            return _project_leaf(w, spec.levels, spec.radius, spec.method,
+                                 transpose=spec.transpose).astype(w.dtype)
+        return w
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def apply_projection(params, spec: ProjectionSpec, step):
+    """Project every ``spec.every`` steps (cheap lax.cond otherwise)."""
+    if spec is None or not spec.enabled:
+        return params
+    if spec.every <= 1:
+        return project_tree(params, spec)
+    return jax.lax.cond(step % spec.every == 0,
+                        lambda p: project_tree(p, spec),
+                        lambda p: p, params)
+
+
+def matched_names(params, spec: ProjectionSpec):
+    """Static list of projected parameter paths (for logging/tests)."""
+    pat = re.compile(spec.pattern)
+    need = sum(k for _, k in spec.levels)
+    names = []
+
+    def one(path, w):
+        name = _path_str(path)
+        if hasattr(w, "ndim") and w.ndim >= need and pat.search(name):
+            names.append(name)
+        return w
+
+    jax.tree_util.tree_map_with_path(one, params)
+    return names
+
+
+def tree_sparsity(params, spec: ProjectionSpec):
+    """Column-sparsity % of each projected leaf (paper's metric, per tensor)."""
+    pat = re.compile(spec.pattern)
+    need = sum(k for _, k in spec.levels)
+    out = {}
+
+    def one(path, w):
+        name = _path_str(path)
+        if w.ndim >= need and pat.search(name):
+            out[name] = sparsity(w.reshape(-1, w.shape[-1]), axis=0)
+        return w
+
+    jax.tree_util.tree_map_with_path(one, params)
+    return out

@@ -1,0 +1,5 @@
+"""repro.parallel — sharding rule engine (DP/TP/EP/SP over the pod mesh)."""
+from .sharding import (  # noqa: F401
+    act_rules, batch_axes, batch_spec, cache_spec_tree, dp_shards,
+    mesh_shape_dict, named, param_rules, tokens_spec,
+)

@@ -1,0 +1,133 @@
+"""Sharding rule engine: logical axes → mesh axes, per shape kind.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+
+Policy (DESIGN.md §6):
+  * TP over 'model' : heads / kv_heads / ffn / experts / vocab / ssm_in
+  * FSDP over 'data': the 'embed' (d_model) dim of every weight — ZeRO-3-style;
+    gathers stream inside the layer scan. Replicated across pods (grads are
+    the only cross-pod traffic).
+  * batch over ('pod','data'); KV-cache sequence over 'model' (flash-decode).
+  * divisibility failures fall back to replication (params.param_specs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.types import ArchConfig, ShapeConfig
+
+
+def mesh_shape_dict(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dim shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_shards(mesh) -> int:
+    shp = mesh_shape_dict(mesh)
+    return int(np.prod([shp[a] for a in batch_axes(mesh)]))
+
+
+def param_rules(mesh, *, fsdp: bool = True) -> Dict[str, object]:
+    """logical axis -> mesh axis for parameters."""
+    rules = {
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "expert_ff": None,       # experts already consume 'model'
+        "experts": "model",
+        "vocab": "model",
+        "ssm_in": "model",
+        "embed": "data" if fsdp else None,
+        "layers": None,
+        "super": None,
+    }
+    return rules
+
+
+def act_rules(mesh, shape: ShapeConfig) -> Dict[str, object]:
+    b_ax = batch_axes(mesh)
+    b_ax = b_ax[0] if len(b_ax) == 1 else b_ax
+    rules = {"batch": b_ax, "cache_seq": "model"}
+    return rules
+
+
+def _shardable(dim: int, axes, shp) -> Optional[object]:
+    if axes is None:
+        return None
+    t = axes if isinstance(axes, tuple) else (axes,)
+    size = int(np.prod([shp[a] for a in t]))
+    return axes if dim % size == 0 else None
+
+
+def batch_spec(mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """P for (batch, ...) arrays — shards batch over ('pod','data') when it
+    divides, over ('data',) as fallback, else replicates (long_500k B=1)."""
+    shp = mesh_shape_dict(mesh)
+    cand = batch_axes(mesh)
+    ax = _shardable(global_batch, cand if len(cand) > 1 else cand[0], shp)
+    if ax is None and len(cand) > 1:
+        ax = _shardable(global_batch, cand[1], shp)
+    return P(ax, *([None] * extra_dims))
+
+
+def tokens_spec(mesh, shape: ShapeConfig, microbatch: int) -> P:
+    """(n_micro, micro_global, seq) training batch."""
+    shp = mesh_shape_dict(mesh)
+    cand = batch_axes(mesh)
+    ax = _shardable(microbatch, cand if len(cand) > 1 else cand[0], shp)
+    if ax is None and len(cand) > 1:
+        ax = _shardable(microbatch, cand[1], shp)
+    return P(None, ax, None)
+
+
+def cache_spec_tree(cfg: ArchConfig, mesh, cache_tree, shape: ShapeConfig):
+    """Specs for a decode cache pytree: batch dim -> data, seq dim -> model.
+
+    Convention per family (see models/*.make_cache):
+      leading axis is always the layer stack (replicated);
+      4/5-D leaves with a long axis == cache length get seq->model.
+    """
+    shp = mesh_shape_dict(mesh)
+    b = shape.global_batch
+    b_ax = batch_axes(mesh)
+    b_ax = b_ax if len(b_ax) > 1 else b_ax[0]
+
+    def one(leaf):
+        dims = leaf.shape
+        parts = [None] * len(dims)
+        # find the batch dim: first dim equal to global_batch after the stacks
+        for i, dimsz in enumerate(dims):
+            if dimsz == b and i >= 1:
+                if _shardable(dimsz, b_ax, shp):
+                    parts[i] = b_ax
+                elif isinstance(b_ax, tuple) and _shardable(dimsz, b_ax[-1], shp):
+                    parts[i] = b_ax[-1]
+                break
+        # seq dim: the dim right after batch when it's >= 1024 (cache length)
+        for i in range(1, len(dims)):
+            if parts[i - 1] is not None or dims[i - 1] == b:
+                if i < len(dims) and dims[i] >= 1024 and dims[i] % shp["model"] == 0:
+                    parts[i] = "model"
+                break
+        # matrix-memory states (mLSTM C: trailing (dk, dv)) — shard dk
+        if "model" not in parts and len(dims) >= 2 and dims[-2] >= 512 \
+                and dims[-2] % shp["model"] == 0:
+            parts[-2] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, cache_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

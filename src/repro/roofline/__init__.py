@@ -1,0 +1,5 @@
+"""repro.roofline — 3-term roofline from compiled dry-run artifacts."""
+from .analysis import (  # noqa: F401
+    HBM_BW, LINK_BW, PEAK_FLOPS, Roofline, analyze, collective_bytes,
+    model_flops,
+)

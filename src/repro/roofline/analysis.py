@@ -1,0 +1,109 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute    = HLO_FLOPs_global / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_global / (chips × HBM_bw)
+    collective = collective_bytes_global / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops + bytes accessed — reported for
+the per-device SPMD module, so ×chips for the global figure);
+collective bytes are parsed out of ``compiled.as_text()`` by summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instructions (async *-start ops counted once, ×chips).
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"((?:\([^)]*\)|[\w\[\],{}]+))\s*"                   # result shape
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind bytes (result-shape-based, per device) from HLO text."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind, _start = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(shape_txt)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    chips: int
+    coll_breakdown: Dict[str, int]
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+
+    def finalize(self):
+        self.t_compute = self.flops_global / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.bytes_global / (self.chips * HBM_BW)
+        self.t_collective = self.coll_bytes_global / (self.chips * LINK_BW)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        return self
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, chips: int, *, hlo_text: Optional[str] = None) -> Roofline:
+    """Structural HLO-text cost walk (correct across scan trip counts) —
+    see hlo_parse.py. ``compiled.cost_analysis()`` is recorded by the caller
+    as a cross-check only (it counts while bodies once)."""
+    from . import hlo_parse
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    costs = hlo_parse.analyze_text(text)
+    return Roofline(
+        flops_global=costs.flops * chips,
+        bytes_global=costs.bytes * chips,
+        coll_bytes_global=costs.coll_bytes * chips,
+        chips=chips,
+        coll_breakdown={k: int(v) for k, v in costs.coll_by_kind.items()},
+    ).finalize()
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D for a train step; 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

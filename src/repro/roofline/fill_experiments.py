@@ -1,0 +1,103 @@
+"""Inject generated tables into EXPERIMENTS.md (replaces <!-- X --> markers).
+
+    PYTHONPATH=src python -m repro.roofline.fill_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+from .report import _fmt_b, _fmt_t, load, roofline_table
+
+
+def memory_rows(recs):
+    lines = ["| cell | args/dev | temp/dev | fits 16 GB? |",
+             "|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        if r["shape"] not in ("train_4k", "decode_32k"):
+            continue
+        mem = r["memory"]
+        tot = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+        fits = "✓" if tot <= 16 * 2**30 else f"✗ ({_fmt_b(tot)})"
+        lines.append(f"| {r['arch']} × {r['shape']} | "
+                     f"{_fmt_b(mem.get('argument_bytes') or 0)} | "
+                     f"{_fmt_b(mem.get('temp_bytes') or 0)} | {fits} |")
+    return "\n".join(lines)
+
+
+def perf_table(base_rec, variants, notes):
+    """base + variant rows with hypothesis/verdict notes."""
+    rf0 = base_rec["roofline"]
+    lines = [
+        "| variant | compute | memory | collective | Δ dominant | verdict |",
+        "|---|---|---|---|---|---|",
+        f"| baseline | {_fmt_t(rf0['t_compute'])} | {_fmt_t(rf0['t_memory'])} "
+        f"| {_fmt_t(rf0['t_collective'])} | — | (paper-faithful) |",
+    ]
+    dom = rf0["bottleneck"]
+    key = f"t_{dom}"
+    for v in variants:
+        rf = v["roofline"]
+        delta = (rf[key] - rf0[key]) / rf0[key] * 100
+        note = notes.get(v["variant"], "")
+        lines.append(
+            f"| {v['variant']} | {_fmt_t(rf['t_compute'])} | "
+            f"{_fmt_t(rf['t_memory'])} | {_fmt_t(rf['t_collective'])} | "
+            f"{delta:+.0f}% {dom} | {note} |")
+    return "\n".join(lines)
+
+
+NOTES = {
+    "kimi_ep2d": "REFUTED — GSPMD replicates on the (data×model) expert einsum (1 TB temp)",
+    "kimi_scatter": "CONFIRMED — K −35%, C −37% (gather dispatch, no one-hot matmul)",
+    "kimi_ep2d_scatter": "REFUTED (same GSPMD replication)",
+    "kimi_ep2d_scatter_mb32": "REFUTED",
+    "kimi_scatter_mb32": "CONFIRMED — K −36%, M −15% (half the FSDP gathers)",
+    "kimi_scatter_mb64": "<1% further on K; temp 100 GB/dev — stop",
+    "xlstm_chunk128": "−4% M only: state-write ∝1/c but R-matrix streaming dominates",
+    "xlstm_chunk256": "flat — refuted as primary lever",
+    "xlstm_chunk512": "flat",
+    "xlstm_shard_r": "CONFIRMED — M −62%, K −48%: sLSTM R no longer re-streamed whole per step",
+    "xlstm_shard_r_chunk128": "CONFIRMED compose — M −67% total vs baseline",
+    "xlstm_chunk128_mb64": "K −30% (fewer gathers) but M flat — shard_r superior",
+    "stablelm_probsbf16": "REFUTED under cost model (unfused convert penalty; on TPU the Pallas kernel supersedes)",
+    "stablelm_chunk2048": "CONFIRMED — M −7% (fewer chunk-scan trips)",
+    "stablelm_probsbf16_c2048": "between the two",
+    "stablelm_mb64": "REFUTED for M (+5%); K −2%",
+    "deepseek_prefill_scatter": "CONFIRMED — C −32%, K −11% (kills one-hot dispatch matmul)",
+}
+
+
+def main():
+    recs = load("experiments/dryrun2")
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    hc = {}
+    for f in glob.glob("experiments/hillclimb/*.json"):
+        v = json.load(open(f))
+        hc[v["variant"]] = v
+
+    def cell_variants(prefix):
+        return [hc[k] for k in sorted(hc) if k.startswith(prefix)]
+
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- DRYRUN_MEMORY -->", memory_rows(recs))
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        roofline_table(recs, "single"))
+    for marker, prefix, arch, shape in [
+            ("<!-- PERF_KIMI -->", "kimi", "kimi-k2-1t-a32b", "train_4k"),
+            ("<!-- PERF_XLSTM -->", "xlstm", "xlstm-1.3b", "train_4k"),
+            ("<!-- PERF_STABLELM -->", "stablelm", "stablelm-1.6b", "train_4k")]:
+        base = by.get((arch, shape, "single"))
+        variants = cell_variants(prefix)
+        if base and variants:
+            text = text.replace(marker, perf_table(base, variants, NOTES))
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro.runtime — checkpointing, fault tolerance, double descent."""
+from .checkpoint import CheckpointManager  # noqa: F401
+from .double_descent import double_descent  # noqa: F401
+from .resilience import (  # noqa: F401
+    HeartbeatFile, StragglerMonitor, StragglerReport, run_with_restarts,
+)

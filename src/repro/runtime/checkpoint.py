@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, elastic restore.
+
+Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}  (+ .tmp staging)
+
+* atomic   — written to ``step_N.tmp`` then os.rename'd (a crash mid-save can
+             never corrupt the latest valid checkpoint).
+* async    — ``save_async`` snapshots to host memory synchronously (cheap)
+             and writes on a daemon thread; ``wait()`` joins before exit.
+* keep-K   — oldest checkpoints garbage-collected after each successful save.
+* elastic  — arrays are saved *unsharded* (gathered); ``restore`` re-shards
+             onto whatever mesh/sharding the new job passes in, so the data
+             axis can shrink/grow between runs (elastic scaling).
+* stream   — the data cursor is the step (see data/pipeline.py), and the RNG
+             seed lives in the manifest: restart is bit-exact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, extra: Optional[dict] = None):
+        self.wait()
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, state, extra: Optional[dict] = None):
+        self.wait()
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), state)  # snapshot
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state, extra: dict):
+        flat = _flatten(host_state)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "╱"): v for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(flat),
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            **extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        """Load a checkpoint; ``shardings`` (same tree structure, NamedSharding
+        leaves) re-shards onto the *current* mesh — elastic restore."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        z = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k.replace("╱", "/"): z[k] for k in z.files}
+        tree = _unflatten(flat)
+
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten({
+                k: jax.device_put(v, flat_sh[k]) if k in flat_sh else jnp.asarray(v)
+                for k, v in flat.items()})
+        else:
+            tree = jax.tree_util.tree_map(jnp.asarray, tree)
+        return tree, manifest

@@ -1,0 +1,50 @@
+"""Double-descent training schedule (paper Appendix B, Algorithm 8).
+
+descent #1: train N epochs → project (BP^{p,q}) → extract the zero mask →
+rewind surviving weights to their INITIAL values → descent #2: retrain with
+the mask frozen (grads and weights multiplied by the mask every step).
+This is the lottery-ticket-style schedule the paper uses for its SAE tables.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ProjectionSpec
+from repro.core import masks as M
+from repro.optim.projection_hook import project_tree
+
+
+def double_descent(init_params, train_epochs_fn: Callable, spec: ProjectionSpec,
+                   projector: Callable = None):
+    """Run the two descents (paper Alg 8: project ONCE after descent #1).
+
+    ``train_epochs_fn(params, mask_or_None) -> trained_params`` encapsulates
+    one full descent (the caller owns optimizer/loop). ``projector`` overrides
+    the mask-inducing projection (e.g. the exact ℓ1,∞ baseline). Returns
+    (final_params, mask_tree, sparsity_per_leaf).
+    """
+    # descent 1 — unconstrained
+    trained = train_epochs_fn(init_params, None)
+    # project onto the ball, then freeze the induced structured mask
+    projected = projector(trained) if projector is not None \
+        else project_tree(trained, spec)
+    mask = jax.tree_util.tree_map(
+        lambda p: (jnp.abs(p) > 0).astype(p.dtype), projected)
+    # rewind: surviving weights restart from initialization (masked)
+    rewound = jax.tree_util.tree_map(lambda w0, m: w0 * m, init_params, mask)
+    # descent 2 — masked retrain
+    final = train_epochs_fn(rewound, mask)
+    stats = {}
+
+    def _collect(path, p):
+        name = "/".join(str(getattr(q, "key", q)) for q in path)
+        if p.ndim >= 2:
+            stats[name] = float(M.sparsity(p.reshape(-1, p.shape[-1]), axis=0))
+        return p
+
+    jax.tree_util.tree_map_with_path(_collect, final)
+    return final, mask, stats

@@ -1,0 +1,2 @@
+"""repro.serving — prefill/decode serve steps + batched request engine."""
+from .engine import generate, make_decode_step, make_prefill  # noqa: F401

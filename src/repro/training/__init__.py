@@ -1,0 +1,2 @@
+"""repro.training — jitted train step with grad accumulation + projection."""
+from .step import init_state, make_loss_fn, make_train_step, xent  # noqa: F401

@@ -1,0 +1,114 @@
+"""Config registry, tuning knobs, and launch-spec plumbing."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.configs.types import SHAPES
+from repro.launch import specs as SP
+
+
+class TestRegistry:
+    def test_all_assigned_archs_present(self):
+        expected = {
+            "stablelm-1.6b", "h2o-danube-1.8b", "granite-3-2b", "qwen3-32b",
+            "whisper-large-v3", "deepseek-v3-671b", "kimi-k2-1t-a32b",
+            "chameleon-34b", "xlstm-1.3b", "zamba2-7b",
+        }
+        assert set(registry.ASSIGNED) == expected
+
+    def test_assignment_table_values(self):
+        q = registry.get_arch("qwen3-32b")
+        assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+                q.vocab) == (64, 5120, 64, 8, 25600, 151936)
+        assert q.qk_norm
+        d = registry.get_arch("deepseek-v3-671b")
+        assert d.moe.n_experts == 256 and d.moe.top_k == 8
+        assert d.mla is not None and d.d_model == 7168
+        k = registry.get_arch("kimi-k2-1t-a32b")
+        assert k.moe.n_experts == 384 and k.vocab == 163840
+        z = registry.get_arch("zamba2-7b")
+        assert z.n_layers == 81 and z.ssm.d_state == 64
+        x = registry.get_arch("xlstm-1.3b")
+        assert x.n_layers == 48 and x.d_ff == 0
+        w = registry.get_arch("whisper-large-v3")
+        assert w.n_enc_layers == 32 and w.vocab == 51866
+        assert registry.get_arch("h2o-danube-1.8b").window == 4096
+
+    def test_param_counts_match_names(self):
+        # template-exact counts within tolerance of the advertised sizes
+        from repro import models
+        from repro.models import params as PM
+        expect = {
+            "stablelm-1.6b": 1.6e9, "h2o-danube-1.8b": 1.8e9,
+            "granite-3-2b": 2.5e9, "qwen3-32b": 32e9,
+            "deepseek-v3-671b": 671e9, "kimi-k2-1t-a32b": 1.04e12,
+            "chameleon-34b": 34e9, "xlstm-1.3b": 1.3e9, "zamba2-7b": 7e9,
+        }
+        for name, n in expect.items():
+            cfg = registry.get_arch(name)
+            tot = PM.count_params(models.get(cfg).template(cfg))
+            # xlstm block internals are slightly heavier than the official
+            # 1.3B release (gated z-branch kept); see DESIGN.md §7
+            hi = 1.6 if name == "xlstm-1.3b" else 1.55
+            assert 0.6 * n <= tot <= hi * n, f"{name}: {tot:.3e} vs {n:.1e}"
+
+    def test_per_arch_modules(self):
+        from repro.configs import qwen3_32b, sae_paper
+        assert qwen3_32b.CONFIG.name == "qwen3-32b"
+        assert sae_paper.SMOKE.family == "sae"
+
+    def test_smoke_configs_are_small(self):
+        for name in registry.ASSIGNED:
+            s = registry.smoke_config(name)
+            assert s.d_model <= 128 and s.vocab <= 512
+
+
+class TestTuning:
+    def test_apply_tuning_moe_dispatch(self):
+        cfg = registry.get_arch("kimi-k2-1t-a32b")
+        tune = dataclasses.replace(SP.tuning_for(cfg), moe_dispatch="scatter")
+        out = SP.apply_tuning(cfg, tune)
+        assert out.moe.dispatch == "scatter"
+        assert cfg.moe.dispatch == "einsum"  # original untouched
+
+    def test_apply_tuning_xlstm(self):
+        cfg = registry.get_arch("xlstm-1.3b")
+        tune = dataclasses.replace(SP.tuning_for(cfg), xlstm_shard_r=True,
+                                   xlstm_chunk=128)
+        out = SP.apply_tuning(cfg, tune)
+        assert out.xlstm.shard_r and out.xlstm.chunk == 128
+
+    def test_giant_moes_get_quantized_moments(self):
+        for name in ("deepseek-v3-671b", "kimi-k2-1t-a32b"):
+            t = SP.tuning_for(registry.get_arch(name))
+            assert t.moment_dtype == "int8" and t.master_dtype == ""
+
+    def test_attn_tune_restored_default(self):
+        from repro.models import layers as L
+        cfg = registry.get_arch("stablelm-1.6b")
+        SP.apply_tuning(cfg, SP.tuning_for(cfg))
+        assert L.ATTN_TUNE["chunk"] == 1024
+        assert L.ATTN_TUNE["probs_dtype"] is None
+
+
+class TestShapes:
+    def test_shape_table(self):
+        assert SHAPES["train_4k"].global_batch == 256
+        assert SHAPES["prefill_32k"].seq_len == 32768
+        assert SHAPES["decode_32k"].kind == "decode"
+        assert SHAPES["long_500k"].seq_len == 524288
+
+    def test_40_cells_accounted(self):
+        n_run = n_skip = 0
+        for arch in registry.ASSIGNED:
+            cfg = registry.get_arch(arch)
+            for shape in SHAPES.values():
+                if SP.cell_skipped(cfg, shape):
+                    n_skip += 1
+                else:
+                    n_run += 1
+        assert n_run + n_skip == 40
+        assert n_skip == 7  # seven full-attention archs × long_500k

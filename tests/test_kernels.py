@@ -1,0 +1,144 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes as required for every kernel in repro.kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ball
+from repro.kernels import ops, ref
+from repro.kernels.bilevel_l1inf import clip_pallas, colmax_pallas
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.l1ball import project_l1_pallas
+
+
+def _rand(shape, seed=0, dtype=jnp.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+_TOL = {jnp.float32: 1e-6, jnp.bfloat16: 2e-2}
+
+
+# --------------------------------------------------------------- bilevel parts
+class TestColmaxKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "shape", [(8, 128), (256, 512), (300, 700), (1024, 257), (7, 1000), (1, 128)]
+    )
+    def test_matches_ref(self, shape, dtype):
+        y = _rand(shape, seed=hash(shape) % 2**31, dtype=dtype, scale=3.0)
+        got = colmax_pallas(y, interpret=True)
+        want = ref.colmax_ref(y)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=_TOL[dtype])
+
+    def test_block_shape_sweep(self):
+        y = _rand((500, 900), seed=3, scale=2.0)
+        want = ref.colmax_ref(y)
+        for bn, bm in [(8, 128), (64, 256), (256, 512), (512, 1024)]:
+            got = colmax_pallas(y, block_n=bn, block_m=bm, interpret=True)
+            np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+class TestClipKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(8, 128), (250, 333), (1024, 512)])
+    def test_matches_ref(self, shape, dtype):
+        y = _rand(shape, seed=11, dtype=dtype, scale=3.0)
+        u = jnp.abs(_rand((shape[1],), seed=12, dtype=dtype))
+        got = clip_pallas(y, u, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(ref.clip_ref(y, u), np.float32), atol=_TOL[dtype])
+
+
+class TestL1BallKernel:
+    @pytest.mark.parametrize("n", [16, 128, 129, 1000, 4096, 25600])
+    @pytest.mark.parametrize("radius", [0.1, 1.0, 50.0])
+    def test_matches_ref(self, n, radius):
+        v = _rand((n,), seed=n, scale=2.0)
+        got = project_l1_pallas(v, radius, interpret=True)
+        want = ref.project_l1_ref(v, radius)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+        assert float(jnp.sum(jnp.abs(got))) <= radius * (1 + 1e-4) + 1e-5
+
+    def test_inside_ball_identity(self):
+        v = _rand((256,), seed=5) * 1e-3
+        got = project_l1_pallas(v, 1.0, interpret=True)
+        np.testing.assert_allclose(got, v, atol=1e-7)
+
+
+class TestBilevelFused:
+    @pytest.mark.parametrize("shape", [(64, 128), (300, 700), (128, 25600 // 8)])
+    @pytest.mark.parametrize("radius", [0.5, 5.0])
+    def test_matches_oracle_and_core(self, shape, radius):
+        y = _rand(shape, seed=7, scale=2.0)
+        got = ops.bilevel_l1inf(y, radius, interpret=True, force=True)
+        np.testing.assert_allclose(got, ref.bilevel_l1inf_ref(y, radius), atol=1e-5)
+        # also against the core (sort-based) implementation
+        from repro.core import bilevel
+        np.testing.assert_allclose(got, bilevel.bilevel_l1inf(y, radius), atol=1e-4)
+
+    def test_feasibility(self):
+        y = _rand((256, 512), seed=8, scale=3.0)
+        got = ops.bilevel_l1inf(y, 2.0, interpret=True, force=True)
+        assert float(jnp.sum(jnp.max(jnp.abs(got), axis=0))) <= 2.0 * (1 + 1e-4)
+
+
+# ------------------------------------------------------------- flash attention
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,hq,hkv,s,d",
+        [(1, 1, 1, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 384, 128), (2, 2, 2, 257, 64)],
+    )
+    def test_causal_matches_ref(self, b, hq, hkv, s, d, dtype):
+        q = _rand((b, hq, s, d), seed=1, dtype=dtype)
+        k = _rand((b, hkv, s, d), seed=2, dtype=dtype)
+        v = _rand((b, hkv, s, d), seed=3, dtype=dtype)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        g = hq // hkv
+        want = ref.flash_attention_ref(
+            q, jnp.repeat(k, g, 1), jnp.repeat(v, g, 1), causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+    def test_noncausal(self):
+        q = _rand((1, 2, 256, 64), seed=4)
+        k = _rand((1, 2, 256, 64), seed=5)
+        v = _rand((1, 2, 256, 64), seed=6)
+        got = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 128, 1000])
+    def test_sliding_window(self, window):
+        q = _rand((1, 2, 384, 64), seed=7)
+        k = _rand((1, 2, 384, 64), seed=8)
+        v = _rand((1, 2, 384, 64), seed=9)
+        got = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_cross_attention_rect(self):
+        # encoder-decoder: kv longer than q
+        q = _rand((1, 2, 128, 64), seed=10)
+        k = _rand((1, 2, 512, 64), seed=11)
+        v = _rand((1, 2, 512, 64), seed=12)
+        got = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_block_size_sweep(self):
+        q = _rand((1, 2, 512, 64), seed=13)
+        k = _rand((1, 2, 512, 64), seed=14)
+        v = _rand((1, 2, 512, 64), seed=15)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        for bq, bk in [(64, 64), (128, 256), (256, 128), (512, 512)]:
+            got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                                  interpret=True)
+            np.testing.assert_allclose(got, want, atol=2e-5)

@@ -1,0 +1,204 @@
+"""Optimizer, projection hook, checkpointing, fault-tolerance runtime."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.types import ProjectionSpec, TrainConfig
+from repro.optim import adamw
+from repro.optim.projection_hook import (apply_projection, matched_names,
+                                         project_tree, tree_sparsity)
+from repro.runtime import (CheckpointManager, HeartbeatFile, StragglerMonitor,
+                           run_with_restarts)
+
+
+# -------------------------------------------------------------------- adamw
+class TestAdamW:
+    def _quad_losses(self, tcfg, steps=60):
+        target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 256)),
+                             jnp.float32)
+        params = {"w": jnp.zeros((4, 256), jnp.float32)}
+        opt = adamw.init(params, tcfg)
+        loss_fn = lambda p: jnp.mean((p["w"] - target) ** 2)
+        losses = []
+        for _ in range(steps):
+            l, g = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw.update(g, opt, params, tcfg)
+            losses.append(float(l))
+        return losses
+
+    def test_converges_on_quadratic(self):
+        tcfg = TrainConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                           warmup=1, total_steps=60, master_dtype="")
+        losses = self._quad_losses(tcfg)
+        assert losses[-1] < 0.05 * losses[0]
+
+    def test_int8_moments_converge(self):
+        tcfg = TrainConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0, warmup=1,
+                           total_steps=60, master_dtype="", moment_dtype="int8")
+        losses = self._quad_losses(tcfg)
+        assert losses[-1] < 0.1 * losses[0]
+
+    def test_quantize_roundtrip(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 1000)),
+                        jnp.float32)
+        q = adamw.quantize_blockwise(x)
+        xr = adamw.dequantize_blockwise(q, 1000)
+        assert q["q"].dtype == jnp.int8
+        # blockwise linear int8: error bounded by scale = max/127 per block
+        err = np.abs(np.asarray(xr - x))
+        bound = np.abs(np.asarray(x)).max() / 127 + 1e-6
+        assert err.max() <= bound
+
+    def test_schedule_warmup_and_decay(self):
+        tcfg = TrainConfig(lr=1e-3, warmup=10, total_steps=100)
+        assert float(adamw.lr_schedule(1, tcfg)) < 2e-4
+        peak = float(adamw.lr_schedule(10, tcfg))
+        assert peak == pytest.approx(1e-3, rel=1e-3)
+        assert float(adamw.lr_schedule(100, tcfg)) < 2e-4
+
+    def test_grad_clip(self):
+        tcfg = TrainConfig(lr=0.0, grad_clip=1.0, master_dtype="")
+        params = {"w": jnp.ones((8, 128))}
+        opt = adamw.init(params, tcfg)
+        g = {"w": jnp.full((8, 128), 100.0)}
+        _, _, m = adamw.update(g, opt, params, tcfg)
+        assert float(m["grad_norm"]) > 1000  # raw norm reported
+
+
+# --------------------------------------------------------------- projection
+class TestProjectionHook:
+    def test_pattern_matching_and_feasibility(self):
+        params = {"blocks": {"mlp": {"w_up": jnp.ones((4, 16, 32)),
+                                     "w_down": jnp.ones((4, 32, 16))},
+                             "ln": jnp.ones((4, 16))}}
+        spec = ProjectionSpec(pattern=r"w_up", radius=2.0,
+                              levels=(("inf", 1), (1, 1)))
+        assert matched_names(params, spec) == ["blocks/mlp/w_up"]
+        out = project_tree(params, spec)
+        # each layer's (16, 32) matrix independently inside the ball
+        norms = jnp.sum(jnp.max(jnp.abs(out["blocks"]["mlp"]["w_up"]), axis=1),
+                        axis=-1)
+        assert bool(jnp.all(norms <= 2.0 + 1e-4))
+        np.testing.assert_allclose(out["blocks"]["mlp"]["w_down"],
+                                   params["blocks"]["mlp"]["w_down"])
+
+    def test_cadence(self):
+        params = {"w_up": jnp.full((8, 8), 10.0)}
+        spec = ProjectionSpec(pattern="w_up", radius=1.0, every=4)
+        p_hit = apply_projection(params, spec, jnp.int32(8))
+        p_miss = apply_projection(params, spec, jnp.int32(9))
+        assert float(jnp.max(p_hit["w_up"])) < 10.0
+        np.testing.assert_allclose(p_miss["w_up"], params["w_up"])
+
+    def test_transpose_groups_rows(self):
+        w = jnp.asarray(np.random.default_rng(2).normal(size=(20, 10)),
+                        jnp.float32)
+        spec = ProjectionSpec(pattern="w", radius=1.0, transpose=True,
+                              levels=(("inf", 1), (1, 1)))
+        out = project_tree({"w": w}, spec)["w"]
+        # groups are rows: sum over rows of rowwise max
+        assert float(jnp.sum(jnp.max(jnp.abs(out), axis=1))) <= 1.0 + 1e-4
+
+    def test_sparsity_report(self):
+        params = {"w_up": jnp.concatenate(
+            [jnp.zeros((8, 4)), jnp.ones((8, 4))], axis=1)}
+        spec = ProjectionSpec(pattern="w_up", radius=1.0)
+        sp = tree_sparsity(params, spec)
+        assert sp["w_up"] == pytest.approx(50.0)
+
+
+# ------------------------------------------------------------- checkpointing
+class TestCheckpointing:
+    def _state(self, v=1.0):
+        return {"params": {"w": jnp.full((4, 8), v), "b": jnp.arange(3.0)},
+                "opt": {"step": jnp.int32(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(10, self._state(2.5), extra={"seed": 123})
+        tree, manifest = mgr.restore()
+        assert manifest["step"] == 10 and manifest["seed"] == 123
+        np.testing.assert_allclose(tree["params"]["w"], 2.5)
+        assert int(tree["opt"]["step"]) == 7
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._state(float(s)))
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_and_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save_async(5, self._state())
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+    def test_atomicity_no_tmp_left(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(1, self._state())
+        assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        for s in (1, 2, 3):
+            mgr.save(s, self._state(float(s)))
+        tree, m = mgr.restore(step=2)
+        np.testing.assert_allclose(tree["params"]["w"], 2.0)
+
+
+# ---------------------------------------------------------------- resilience
+class TestResilience:
+    def test_straggler_detection(self):
+        mon = StragglerMonitor(n_hosts=8, warn_factor=1.5, evict_factor=3.0,
+                               min_samples=4)
+        rep = None
+        for step in range(10):
+            times = {h: 1.0 for h in range(8)}
+            times[3] = 4.0  # host 3 is 4x slower
+            rep = mon.record(times)
+        assert rep.stragglers == [3]
+        assert rep.action == "evict"
+        assert rep.worst_host == 3
+
+    def test_no_false_positives(self):
+        mon = StragglerMonitor(n_hosts=4)
+        for _ in range(10):
+            rep = mon.record({h: 1.0 + 0.01 * h for h in range(4)})
+        assert rep.action == "none"
+
+    def test_heartbeat(self, tmp_path):
+        hb = HeartbeatFile(str(tmp_path), timeout=60)
+        hb.beat(0)
+        hb.beat(1)
+        assert hb.dead_hosts(expected=3) == [2]
+
+    def test_run_with_restarts(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        attempts = []
+
+        def train(resume):
+            attempts.append(resume)
+            step = resume or 0
+            while step < 30:
+                step += 10
+                mgr.save(step, {"s": jnp.int32(step)})
+                if step == 20 and len(attempts) == 1:
+                    raise RuntimeError("simulated host failure")
+            return step
+
+        final = run_with_restarts(train, mgr, max_restarts=2)
+        assert final == 30
+        assert attempts == [None, 20]  # restarted from the checkpoint
+
+    def test_restart_gives_up(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+
+        def always_fail(resume):
+            raise RuntimeError("dead node")
+
+        with pytest.raises(RuntimeError):
+            run_with_restarts(always_fail, mgr, max_restarts=2)
