@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (bilevel_l1inf, project_l1inf_exact, multilevel_project,
+from repro.core import (available_methods, bilevel_l1inf, project_l1,
+                        project_l1inf_exact, multilevel_project,
                         trilevel_l111, trilevel_l1infinf)
 
 
@@ -78,6 +79,40 @@ def fig3_trilevel(full=False):
         y = jnp.asarray(rng.uniform(0, 1, (d, n, m)), jnp.float32)
         out.append((f"fig3_tri_l1infinf_m{m}", _time(t_inf, y, reps=3), f"d={d},n={n}"))
         out.append((f"fig3_tri_l111_m{m}", _time(t_111, y, reps=3), f"d={d},n={n}"))
+    return out
+
+
+def methods_sweep(full=False):
+    """ℓ1 backend shoot-out: sort vs bisect vs filter over the fig2 size sweep.
+
+    Two workload shapes per (n, m):
+
+    * ``flat``  — one vector of n·m entries (the outer-step / Prop 6.3 shape);
+      the largest default size already has n·m = 1e6, where the linear-time
+      filter backend must beat sort by >= 1.5x on CPU (CI asserts the artifact).
+    * ``batch`` — m vectors of length n with per-vector radii (the q = 1 inner
+      step of the bi-/multi-level projections).
+    """
+    ns = (1000, 2000, 5000, 10000) if full else (250, 500, 1000, 2000)
+    m = 1000 if full else 500
+    rng = np.random.default_rng(4)
+    methods = available_methods()
+    out = []
+    for n in ns:
+        flat = jnp.asarray(rng.uniform(0, 1, (n * m,)), jnp.float32)
+        batch = jnp.asarray(rng.uniform(0, 1, (m, n)), jnp.float32)
+        radii = jnp.full((m,), 1.0, jnp.float32)
+        for kind, y, r in (("flat", flat, 1.0), ("batch", batch, radii)):
+            times = {}
+            for method in methods:
+                fn = jax.jit(lambda v, method=method, r=r:
+                             project_l1(v, r, method=method))
+                times[method] = _time(fn, y, reps=3)
+            for method in methods:
+                out.append((
+                    f"methods_{kind}_{method}_n{n}", times[method],
+                    f"nm={n * m},speedup_vs_sort={times['sort'] / times[method]:.2f}",
+                ))
     return out
 
 

@@ -1,24 +1,63 @@
 """Benchmark driver — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,fig2,...]
+                                            [--json-dir DIR] [--no-json]
 
-Prints ``name,us_per_call,derived`` CSV rows (µs medians, steady-state).
-Default sizes are scaled for the single-core container; --full uses the
-paper's sizes. Roofline/dry-run numbers live in experiments/ (they come from
-the AOT pipeline, not this driver).
+Prints ``name,us_per_call,derived`` CSV rows (µs medians, steady-state) and,
+unless ``--no-json``, writes one machine-readable ``BENCH_<section>.json`` per
+section into ``--json-dir`` (default: CWD) — the bench-trajectory artifacts CI
+uploads. Default sizes are scaled for the single-core container; --full uses
+the paper's sizes. Roofline/dry-run numbers live in experiments/ (they come
+from the AOT pipeline, not this driver).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import platform
 import sys
+
+# artifact file names per section (the methods sweep seeds the trajectory)
+_JSON_NAMES = {
+    "fig1": "BENCH_fig1_radius.json",
+    "fig2": "BENCH_fig2_size.json",
+    "fig3": "BENCH_fig3_trilevel.json",
+    "fig4": "BENCH_fig4_parallel.json",
+    "table1": "BENCH_table1_scaling.json",
+    "methods": "BENCH_projection_methods.json",
+    "sae": "BENCH_sae_tables.json",
+}
+
+
+def _write_json(json_dir: pathlib.Path, section: str, rows, full: bool) -> None:
+    import jax
+
+    payload = {
+        "section": section,
+        "full": full,
+        "platform": jax.devices()[0].platform,
+        "machine": platform.machine(),
+        "rows": [
+            {"name": name, "us_per_call": round(us, 1), "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    path = json_dir / _JSON_NAMES[section]
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,table1,sae")
+                    help="comma list: fig1,fig2,fig3,fig4,table1,methods,sae")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<section>.json artifacts")
+    ap.add_argument("--no-json", action="store_true",
+                    help="CSV to stdout only, no artifact files")
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
@@ -29,16 +68,26 @@ def main(argv=None) -> None:
         "fig2": lambda: projections.fig2_size(full=args.full),
         "fig3": lambda: projections.fig3_trilevel(full=args.full),
         "table1": lambda: projections.table1_scaling(full=args.full),
+        "methods": lambda: projections.methods_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
     }
+    unknown = only - set(sections)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; pick from {sorted(sections)}")
+    json_dir = pathlib.Path(args.json_dir)
+    if not args.no_json:
+        json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for key, fn in sections.items():
         if only and key not in only:
             continue
-        for name, us, derived in fn():
+        rows = fn()
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
+        if not args.no_json:
+            _write_json(json_dir, key, rows, args.full)
 
 
 if __name__ == "__main__":

@@ -168,7 +168,10 @@ class ProjectionSpec:
     levels: Tuple[Tuple[object, int], ...] = (("inf", 1), (1, 1))  # bi-level l1inf
     radius: float = 1.0
     every: int = 1                # apply cadence (steps)
-    method: str = "bisect"        # l1 solver (bisect = kernel/TPU friendly)
+    method: str = "bisect"        # l1 solver backend (core.ball registry:
+                                  # "sort" | "bisect" | "filter"; bisect =
+                                  # kernel/TPU friendly + differentiable,
+                                  # filter = linear-time CPU/throughput pick)
     transpose: bool = False       # project the transposed trailing axes
                                   # (groups = rows, e.g. SAE feature selection)
     enabled: bool = True

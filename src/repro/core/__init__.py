@@ -1,15 +1,22 @@
 """repro.core — the paper's contribution: bi-/multi-level norm-ball projections."""
 
 from .ball import (  # noqa: F401
+    available_methods,
     ball_norm,
+    canonical_norm,
+    method_info,
     norm_reduce,
     project_ball,
+    project_grouped,
     project_l1,
     project_l1_bisect,
+    project_l1_filter,
     project_l1_sort,
     project_l2,
     project_linf,
     project_simplex,
+    register_l1_method,
+    resolve_method,
 )
 from .bilevel import (  # noqa: F401
     bilevel_l11,

@@ -13,11 +13,12 @@ a per-column soft-threshold with per-column radius.
 Everything here is jit-safe and works on any 2-D array; use
 ``bilevel_project_axes`` for arbitrary tensors/axes (used by the training-time
 projection hook where weight matrices are (d_in, d_out) etc.).
+
+``method`` selects the ℓ1 θ-solver backend (see ``ball.available_methods()``);
+all per-norm dispatch is delegated to the tables in ``core.ball``.
 """
 
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
@@ -32,22 +33,14 @@ def _outer_project(v: jax.Array, p, radius, method: str) -> jax.Array:
 
 def _inner_project_cols(y: jax.Array, q, u: jax.Array, method: str) -> jax.Array:
     """Project every column y[:, j] onto the q-ball of radius u[j]."""
-    if q in (jnp.inf, float("inf"), "inf"):
-        return jnp.clip(y, -u[None, :], u[None, :])
-    if q in (2, "2"):
-        nrm = jnp.sqrt(jnp.sum(jnp.square(y), axis=0))
-        scale = jnp.where(nrm > u, u / jnp.maximum(nrm, 1e-30), 1.0)
-        return y * scale[None, :]
-    if q in (1, "1"):
-        # columns as batch: (m, n) with per-column radius
-        return ball.project_l1(y.T, u, method=method).T
-    raise ValueError(f"unsupported inner norm {q!r}")
+    return ball.project_grouped(y, q, u, inner_axes=(0,), method=method)
 
 
 def bilevel_project(y: jax.Array, radius, p=1, q=jnp.inf, method: str = "sort") -> jax.Array:
     """BP^{p,q}_radius(Y) for a 2-D Y, aggregating columns (axis 0)."""
     if y.ndim != 2:
         raise ValueError("bilevel_project expects a 2-D array; use bilevel_project_axes")
+    method = ball.resolve_method(method)
     v = ball.norm_reduce(y, q, axes=0)  # (m,) non-negative
     u = _outer_project(v, p, radius, method)
     # outer projection of a non-negative vector stays non-negative for p in {1,2,inf}
@@ -83,27 +76,9 @@ def bilevel_project_axes(y: jax.Array, radius, p=1, q=jnp.inf, *, inner_axes,
     Equivalent to reshaping to 2-D, projecting, and reshaping back — but done
     with broadcasting so it fuses well.
     """
+    method = ball.resolve_method(method)
     inner_axes = tuple(a % y.ndim for a in inner_axes)
-    outer_axes = tuple(a for a in range(y.ndim) if a not in inner_axes)
     v = ball.norm_reduce(y, q, axes=inner_axes)  # shape = outer dims
     u_flat = _outer_project(v.reshape(-1), p, radius, method)
     u = u_flat.reshape(v.shape)
-    # broadcast u back over the inner axes
-    u_b = jnp.expand_dims(u, inner_axes)
-    if q in (jnp.inf, float("inf"), "inf"):
-        return jnp.clip(y, -u_b, u_b)
-    if q in (2, "2"):
-        nrm = jnp.sqrt(jnp.sum(jnp.square(y), axis=inner_axes, keepdims=True))
-        scale = jnp.where(nrm > u_b, u_b / jnp.maximum(nrm, 1e-30), 1.0)
-        return y * scale
-    if q in (1, "1"):
-        # move inner axes last, flatten, per-group l1 projection
-        perm = outer_axes + inner_axes
-        yt = jnp.transpose(y, perm)
-        outer_shape = yt.shape[: len(outer_axes)]
-        inner_size = math.prod(yt.shape[len(outer_axes):])
-        proj = ball.project_l1(yt.reshape((-1, inner_size)), u_flat, method=method)
-        proj = proj.reshape(outer_shape + yt.shape[len(outer_axes):])
-        inv = tuple(perm.index(i) for i in range(y.ndim))
-        return jnp.transpose(proj, inv)
-    raise ValueError(f"unsupported inner norm {q!r}")
+    return ball.project_grouped(y, q, u, inner_axes=inner_axes, method=method)

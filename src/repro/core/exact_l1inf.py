@@ -61,22 +61,19 @@ def _caps_for_lambda(lam, a_sorted_desc, csum, dks, n):
     return t, dF
 
 
-def project_l1inf_exact(y: jax.Array, radius, iters: int = _NEWTON_ITERS) -> jax.Array:
-    """Exact projection of Y (n, m) onto the ℓ1,∞ ball of ``radius``.
-
-    Semismooth-Newton on the dual radius λ. Returns Y unchanged when already
-    feasible. fp32 recommended (sorting + prefix sums).
-    """
-    orig_dtype = y.dtype
-    yf = y.astype(jnp.float32)
-    a = jnp.abs(yf)
-    n, m = a.shape
-    radius = jnp.asarray(radius, jnp.float32)
-
+def _sorted_column_stats(a: jax.Array):
+    """(a_sorted_desc, csum, dks) shared by every dual solver."""
+    n = a.shape[0]
     a_sorted = jnp.sort(a, axis=0)[::-1, :]  # descending per column
     csum = jnp.cumsum(a_sorted, axis=0)
     ks = jnp.arange(1, n + 1, dtype=jnp.float32)[:, None]
     dks = csum - ks * a_sorted  # d_k, non-decreasing in k
+    return a_sorted, csum, dks
+
+
+def _solve_lambda_newton(a, a_sorted, csum, dks, radius, iters):
+    """Semismooth-Newton on F(λ) = Σ t_j(λ) - η, monotone from λ=0."""
+    n = a.shape[0]
 
     def newton_body(_, lam):
         t, dF = _caps_for_lambda(lam, a_sorted, csum, dks, n)
@@ -86,7 +83,60 @@ def project_l1inf_exact(y: jax.Array, radius, iters: int = _NEWTON_ITERS) -> jax
         lam_next = lam - step
         return jnp.maximum(lam_next, 0.0)
 
-    lam = jax.lax.fori_loop(0, iters, newton_body, jnp.zeros((), jnp.float32))
+    return jax.lax.fori_loop(0, iters, newton_body, jnp.zeros((), jnp.float32))
+
+
+def _solve_lambda_bisect(a, a_sorted, csum, dks, radius, iters):
+    """Bisection on F(λ) (slower, very robust — the cross-check oracle)."""
+    n = a.shape[0]
+    lo = jnp.zeros((), jnp.float32)
+    hi = jnp.sum(jnp.max(a, axis=0))  # F(hi) <= 0 since every t_j(hi) = 0… (g <= S_n <= hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        F = jnp.sum(_caps_for_lambda(mid, a_sorted, csum, dks, n)[0]) - radius
+        return jnp.where(F > 0, mid, lo), jnp.where(F > 0, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+# dual-λ solver registry — same shape as core.ball's ℓ1 backend table so a new
+# root-finder (e.g. the Newton variant of https://arxiv.org/pdf/1806.10041) is
+# one entry here, not a new public function.
+_DUAL_SOLVERS = {
+    "newton": (_solve_lambda_newton, _NEWTON_ITERS),
+    "bisect": (_solve_lambda_bisect, 100),
+}
+
+
+def resolve_dual_solver(method: str) -> str:
+    if method not in _DUAL_SOLVERS:
+        raise ValueError(
+            f"unknown l1inf dual solver {method!r}; available: {sorted(_DUAL_SOLVERS)}"
+        )
+    return method
+
+
+def project_l1inf_exact(y: jax.Array, radius, iters: int | None = None,
+                        method: str = "newton") -> jax.Array:
+    """Exact projection of Y (n, m) onto the ℓ1,∞ ball of ``radius``.
+
+    ``method`` selects the dual-λ root search: "newton" (semismooth Newton,
+    default) or "bisect". Returns Y unchanged when already feasible. fp32
+    recommended (sorting + prefix sums).
+    """
+    solver, default_iters = _DUAL_SOLVERS[resolve_dual_solver(method)]
+    orig_dtype = y.dtype
+    yf = y.astype(jnp.float32)
+    a = jnp.abs(yf)
+    n = a.shape[0]
+    radius = jnp.asarray(radius, jnp.float32)
+
+    a_sorted, csum, dks = _sorted_column_stats(a)
+    lam = solver(a, a_sorted, csum, dks, radius,
+                 default_iters if iters is None else iters)
     t, _ = _caps_for_lambda(lam, a_sorted, csum, dks, n)
 
     x = jnp.sign(yf) * jnp.minimum(a, t[None, :])
@@ -95,32 +145,5 @@ def project_l1inf_exact(y: jax.Array, radius, iters: int = _NEWTON_ITERS) -> jax
 
 
 def project_l1inf_exact_bisect(y: jax.Array, radius, iters: int = 100) -> jax.Array:
-    """Bisection variant (cross-check oracle for tests; slower, very robust)."""
-    orig_dtype = y.dtype
-    yf = y.astype(jnp.float32)
-    a = jnp.abs(yf)
-    n, m = a.shape
-    radius = jnp.asarray(radius, jnp.float32)
-    a_sorted = jnp.sort(a, axis=0)[::-1, :]
-    csum = jnp.cumsum(a_sorted, axis=0)
-    ks = jnp.arange(1, n + 1, dtype=jnp.float32)[:, None]
-    dks = csum - ks * a_sorted
-
-    def caps(lam):
-        t, _ = _caps_for_lambda(lam, a_sorted, csum, dks, n)
-        return t
-
-    lo = jnp.zeros((), jnp.float32)
-    hi = jnp.sum(jnp.max(a, axis=0))  # F(hi) <= 0 since every t_j(hi) = 0… (g <= S_n <= hi)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        F = jnp.sum(caps(mid)) - radius
-        return jnp.where(F > 0, mid, lo), jnp.where(F > 0, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    t = caps(0.5 * (lo + hi))
-    x = jnp.sign(yf) * jnp.minimum(a, t[None, :])
-    feasible = l1inf_norm(yf) <= radius
-    return jnp.where(feasible, yf, x).astype(orig_dtype)
+    """Bisection variant (cross-check oracle for tests)."""
+    return project_l1inf_exact(y, radius, iters=iters, method="bisect")

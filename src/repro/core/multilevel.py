@@ -45,6 +45,7 @@ def multilevel_project(y: jax.Array, levels: Sequence[Level], radius,
                        method: str = "sort") -> jax.Array:
     """MP^ν_radius(Y) — recursive implementation of Algorithm 6."""
     _check_levels(y.shape, levels)
+    method = ball.resolve_method(method)
     (q, k), rest = levels[0], levels[1:]
     if not rest:
         # |ν| = 1: classical projection of the flattened tensor (Prop 6.3)
@@ -53,20 +54,7 @@ def multilevel_project(y: jax.Array, levels: Sequence[Level], radius,
     inner_axes = tuple(range(k))
     v = ball.norm_reduce(y, q, axes=inner_axes)      # drop leading k axes
     u = multilevel_project(v, rest, radius, method)  # recurse on the aggregate
-    u_b = jnp.expand_dims(u, inner_axes)
-    if q in (jnp.inf, float("inf"), "inf"):
-        return jnp.clip(y, -u_b, u_b)
-    if q in (2, "2"):
-        nrm = jnp.sqrt(jnp.sum(jnp.square(y), axis=inner_axes, keepdims=True))
-        scale = jnp.where(nrm > u_b, u_b / jnp.maximum(nrm, 1e-30), 1.0)
-        return y * scale
-    if q in (1, "1"):
-        inner_size = math.prod(y.shape[:k])
-        # groups last for the batched l1 projection
-        flat = y.reshape((inner_size, -1)).T            # (groups, inner)
-        proj = ball.project_l1(flat, u.reshape(-1), method=method)
-        return proj.T.reshape(y.shape)
-    raise ValueError(f"unsupported level norm {q!r}")
+    return ball.project_grouped(y, q, u, inner_axes=inner_axes, method=method)
 
 
 def trilevel_l1infinf(y: jax.Array, radius, method: str = "sort") -> jax.Array:

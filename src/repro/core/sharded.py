@@ -46,6 +46,8 @@ def bilevel_project_sharded(y_local: jax.Array, radius, p=1, q=jnp.inf,
 
 def make_sharded_bilevel(mesh, axis_name: str, p=1, q=jnp.inf, method: str = "sort"):
     """shard_map'd bi-level projection: columns (axis 1) sharded over axis_name."""
+    method = ball.resolve_method(method)  # fail at build time, not inside shard_map
+
     def fn(y, radius):
         body = functools.partial(
             bilevel_project_sharded, p=p, q=q, axis_name=axis_name, method=method

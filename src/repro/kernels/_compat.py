@@ -1,0 +1,6 @@
+"""Version-compat shims for the Pallas TPU API."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -24,7 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
 
 DEFAULT_BLOCK_N = 256   # rows per tile (sublane axis)
 DEFAULT_BLOCK_M = 512   # cols per tile (lane axis)
@@ -55,6 +56,22 @@ def _clip_kernel(y_ref, u_ref, out_ref):
     out_ref[...] = jnp.clip(y_ref[...], -u, u)
 
 
+def bilevel_l1inf_pallas(y: jax.Array, radius, *, method: str = "bisect",
+                         block_n: int = DEFAULT_BLOCK_N,
+                         block_m: int = DEFAULT_BLOCK_M,
+                         interpret: bool = False) -> jax.Array:
+    """Fused bi-level ℓ1,∞ projection: colmax → outer P¹ → clip, all Pallas.
+
+    ``method`` selects the outer-step threshold kernel ("bisect" or the
+    linear-time "filter"); see kernels.l1ball.KERNEL_METHODS.
+    """
+    from .l1ball import project_l1_pallas
+
+    v = colmax_pallas(y, block_n=block_n, block_m=block_m, interpret=interpret)
+    u = project_l1_pallas(v, radius, method=method, interpret=interpret)
+    return clip_pallas(y, u, block_n=block_n, block_m=block_m, interpret=interpret)
+
+
 def colmax_pallas(y: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
                   block_m: int = DEFAULT_BLOCK_M, interpret: bool = False) -> jax.Array:
     """Per-column max|·| of a 2-D array via a tiled grid reduction."""
@@ -68,7 +85,7 @@ def colmax_pallas(y: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
         in_specs=[pl.BlockSpec((block_n, block_m), lambda j, i: (i, j))],
         out_specs=pl.BlockSpec((1, block_m), lambda j, i: (0, j)),
         out_shape=jax.ShapeDtypeStruct((1, m), y.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -93,7 +110,7 @@ def clip_pallas(y: jax.Array, u: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
         ],
         out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), y.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,13 +1,19 @@
-"""Pallas TPU kernel: ℓ1-ball projection of a vector by bisection.
+"""Pallas TPU kernels: ℓ1-ball projection of a vector.
 
-The outer step of the bi-level projection. Serial-optimal algorithms
-(Condat/Michelot) do not map to the VPU; bisection does — each iteration is an
-elementwise soft-threshold + a tree reduction, all inside VMEM (DESIGN.md §3).
+The outer step of the bi-level projection. Two in-VMEM algorithms:
 
-Single-block kernel: the whole (padded) vector lives in VMEM. That covers the
-aggregate vectors of every assigned architecture (d_ff ≤ 25600, experts ≤ 384,
-vocab ≤ 163840 → ≤ 640 KB f32). ``ops.py`` falls back to the jnp path for
-anything larger.
+* ``bisect`` — k fixed iterations of soft-threshold + tree reduction. Serial
+  depth k·log n, fully VPU-shaped (DESIGN.md §3). Accuracy ~2^-k.
+* ``filter`` — Michelot/Condat filtering: a ``lax.while_loop`` fixed point on
+  the threshold θ over a shrinking active set (masking, no sorting). Converges
+  exactly in a handful of sweeps on typical data — O(n) expected work versus
+  the bisect kernel's fixed 64 sweeps.
+
+Serial-optimal heap/partition variants do not map to the VPU; both kernels use
+only elementwise ops + reductions. Single-block kernels: the whole (padded)
+vector lives in VMEM. That covers the aggregate vectors of every assigned
+architecture (d_ff ≤ 25600, experts ≤ 384, vocab ≤ 163840 → ≤ 640 KB f32).
+``ops.py`` falls back to the jnp path for anything larger.
 """
 
 from __future__ import annotations
@@ -23,13 +29,16 @@ _ITERS = 64
 _LANE = 128
 
 
-def _l1ball_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: int):
+def _masked_abs(v_ref, n_total: int):
     v = v_ref[...]  # (1, n_pad)
-    radius = radius_ref[0]
     ids = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
-    valid = ids < n_total
-    a = jnp.where(valid, jnp.abs(v), 0.0)
+    a = jnp.where(ids < n_total, jnp.abs(v), 0.0)
+    return v, a
 
+
+def _l1ball_bisect_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: int):
+    v, a = _masked_abs(v_ref, n_total)
+    radius = radius_ref[0]
     inside = jnp.sum(a) <= radius
 
     def body(_, loh):
@@ -48,15 +57,73 @@ def _l1ball_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: int):
     out_ref[...] = jnp.sign(v) * jnp.maximum(a - theta, 0.0)
 
 
-def project_l1_pallas(v: jax.Array, radius, *, iters: int = _ITERS,
-                      interpret: bool = False) -> jax.Array:
-    """Project a 1-D vector onto the ℓ1 ball of ``radius`` (bisection, VMEM)."""
+def _l1ball_filter_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: int):
+    """Michelot filtering in VMEM: θ ← (Σ_{aᵢ>θ} aᵢ - r)/#{aᵢ>θ} to fixpoint.
+
+    Outside the ball θ is strictly positive and non-decreasing, so the zero
+    padding (and true zeros) can never enter the active set — the mask IS the
+    shrinking active set, no compaction needed. ``iters`` caps the sweep count
+    (termination is guaranteed in ≤ n sweeps; typical data needs < 10).
+    """
+    v, a = _masked_abs(v_ref, n_total)
+    radius = radius_ref[0]
+    s0 = jnp.sum(a)
+    inside = s0 <= radius
+    theta0 = (s0 - radius) / n_total
+
+    def cond(state):
+        _, _, changed, it = state
+        return jnp.logical_and(changed, it < iters)
+
+    def body(state):
+        theta, count, _, it = state
+        active = a > theta
+        new_count = jnp.sum(active.astype(jnp.int32))
+        ssum = jnp.sum(jnp.where(active, a, 0.0))
+        new_theta = jnp.where(
+            new_count > 0,
+            (ssum - radius) / jnp.maximum(new_count, 1).astype(a.dtype),
+            theta,
+        )
+        changed = jnp.logical_and(new_count != count, new_count > 0)
+        return new_theta, new_count, changed, it + 1
+
+    theta, _, _, _ = jax.lax.while_loop(
+        cond, body, (theta0, jnp.int32(n_total), jnp.bool_(True), jnp.int32(0)))
+    theta = jnp.where(inside, jnp.zeros((), v.dtype), jnp.maximum(theta, 0.0))
+    out_ref[...] = jnp.sign(v) * jnp.maximum(a - theta, 0.0)
+
+
+# threshold-kernel dispatch — keyed by the core.ball backend names ("sort" has
+# no VPU mapping; ops.py routes it to the jnp oracle instead)
+_THRESHOLD_KERNELS = {
+    "bisect": _l1ball_bisect_kernel,
+    "filter": _l1ball_filter_kernel,
+}
+
+KERNEL_METHODS = tuple(sorted(_THRESHOLD_KERNELS))
+
+
+def project_l1_pallas(v: jax.Array, radius, *, method: str = "bisect",
+                      iters: int | None = None, interpret: bool = False) -> jax.Array:
+    """Project a 1-D vector onto the ℓ1 ball of ``radius`` in VMEM.
+
+    ``method`` ∈ {"bisect", "filter"} selects the threshold kernel.
+    """
+    if method not in _THRESHOLD_KERNELS:
+        raise ValueError(
+            f"no pallas threshold kernel for method {method!r}; "
+            f"available: {sorted(_THRESHOLD_KERNELS)}"
+        )
     (n,) = v.shape
+    if iters is None:
+        # filter terminates in <= n sweeps; bisect needs its fixed budget
+        iters = n + 2 if method == "filter" else _ITERS
     n_pad = max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE)
     v2 = jnp.zeros((1, n_pad), v.dtype).at[0, :n].set(v)
     r = jnp.asarray(radius, v.dtype).reshape(1)
     out = pl.pallas_call(
-        functools.partial(_l1ball_kernel, n_total=n, iters=iters),
+        functools.partial(_THRESHOLD_KERNELS[method], n_total=n, iters=iters),
         grid=(1,),
         in_specs=[
             pl.BlockSpec((1, n_pad), lambda i: (0, 0)),

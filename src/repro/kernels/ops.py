@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .bilevel_l1inf import clip_pallas, colmax_pallas
 from .flash_attention import flash_attention
-from .l1ball import project_l1_pallas
+from .l1ball import KERNEL_METHODS, project_l1_pallas
 
 # vectors larger than this stay on the jnp path (single-block VMEM kernel limit)
 _L1_KERNEL_MAX = 512 * 1024
@@ -25,22 +25,24 @@ def use_pallas() -> bool:
     return jax.devices()[0].platform == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "force"))
-def bilevel_l1inf(y: jax.Array, radius, *, interpret: bool = False,
-                  force: bool = False) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("method", "interpret", "force"))
+def bilevel_l1inf(y: jax.Array, radius, *, method: str = "bisect",
+                  interpret: bool = False, force: bool = False) -> jax.Array:
     """Bi-level ℓ1,∞ projection — Pallas on TPU, jnp oracle elsewhere.
 
-    ``force=True`` routes through the kernels regardless of platform
+    ``method`` selects the outer ℓ1 solve ("bisect" | "filter" have VMEM
+    kernels; anything else — e.g. "sort" — runs the jnp backend for the outer
+    step). ``force=True`` routes through the kernels regardless of platform
     (with ``interpret=True`` on CPU: the per-kernel correctness tests).
     """
     if force or use_pallas():
         v = colmax_pallas(y, interpret=interpret)
-        if v.shape[0] <= _L1_KERNEL_MAX:
-            u = project_l1_pallas(v, radius, interpret=interpret)
+        if v.shape[0] <= _L1_KERNEL_MAX and method in KERNEL_METHODS:
+            u = project_l1_pallas(v, radius, method=method, interpret=interpret)
         else:
-            u = ref.project_l1_ref(v, radius)
+            u = ref.project_l1_ref(v, radius, method=method)
         return clip_pallas(y, u, interpret=interpret)
-    return ref.bilevel_l1inf_ref(y, radius)
+    return ref.bilevel_l1inf_ref(y, radius, method=method)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "interpret", "force"))

@@ -16,13 +16,13 @@ def clip_ref(y: jax.Array, u: jax.Array) -> jax.Array:
     return jnp.clip(y, -u[None, :].astype(y.dtype), u[None, :].astype(y.dtype))
 
 
-def project_l1_ref(v: jax.Array, radius) -> jax.Array:
-    return ball.project_l1(v, radius, method="bisect")
+def project_l1_ref(v: jax.Array, radius, method: str = "bisect") -> jax.Array:
+    return ball.project_l1(v, radius, method=ball.resolve_method(method))
 
 
-def bilevel_l1inf_ref(y: jax.Array, radius) -> jax.Array:
+def bilevel_l1inf_ref(y: jax.Array, radius, method: str = "bisect") -> jax.Array:
     v = colmax_ref(y)
-    u = ball.project_l1(v, radius, method="bisect")
+    u = project_l1_ref(v, radius, method=method)
     return clip_ref(y, u)
 
 

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.types import ProjectionSpec
-from repro.core import multilevel
+from repro.core import ball, multilevel
 from repro.core.masks import sparsity
 
 
@@ -60,11 +60,12 @@ def project_tree(params, spec: ProjectionSpec):
     """Unconditionally project matched leaves (jit-safe)."""
     pat = re.compile(spec.pattern)
     need = sum(k for _, k in spec.levels)
+    method = ball.resolve_method(spec.method)  # config errors surface here once
 
     def one(path, w):
         name = _path_str(path)
         if w.ndim >= need and pat.search(name):
-            return _project_leaf(w, spec.levels, spec.radius, spec.method,
+            return _project_leaf(w, spec.levels, spec.radius, method,
                                  transpose=spec.transpose).astype(w.dtype)
         return w
 

@@ -1,0 +1,16 @@
+"""Make the src/ layout importable without an editable install.
+
+``pip install -e .[test]`` is the supported path (see pyproject.toml); this
+shim keeps the historical ``PYTHONPATH=src python -m pytest`` invocation and
+bare ``pytest`` working in environments without the install.
+"""
+
+import pathlib
+import sys
+
+_SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+if _SRC.is_dir():
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, str(_SRC))

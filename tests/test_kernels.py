@@ -8,9 +8,10 @@ import pytest
 
 from repro.core import ball
 from repro.kernels import ops, ref
-from repro.kernels.bilevel_l1inf import clip_pallas, colmax_pallas
+from repro.kernels.bilevel_l1inf import (bilevel_l1inf_pallas, clip_pallas,
+                                         colmax_pallas)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.l1ball import project_l1_pallas
+from repro.kernels.l1ball import KERNEL_METHODS, project_l1_pallas
 
 
 def _rand(shape, seed=0, dtype=jnp.float32, scale=1.0):
@@ -56,19 +57,51 @@ class TestClipKernel:
 
 
 class TestL1BallKernel:
+    @pytest.mark.parametrize("method", KERNEL_METHODS)
     @pytest.mark.parametrize("n", [16, 128, 129, 1000, 4096, 25600])
     @pytest.mark.parametrize("radius", [0.1, 1.0, 50.0])
-    def test_matches_ref(self, n, radius):
+    def test_matches_ref(self, n, radius, method):
         v = _rand((n,), seed=n, scale=2.0)
-        got = project_l1_pallas(v, radius, interpret=True)
+        got = project_l1_pallas(v, radius, method=method, interpret=True)
         want = ref.project_l1_ref(v, radius)
         np.testing.assert_allclose(got, want, atol=1e-5)
         assert float(jnp.sum(jnp.abs(got))) <= radius * (1 + 1e-4) + 1e-5
 
-    def test_inside_ball_identity(self):
+    @pytest.mark.parametrize("method", KERNEL_METHODS)
+    def test_inside_ball_identity(self, method):
         v = _rand((256,), seed=5) * 1e-3
-        got = project_l1_pallas(v, 1.0, interpret=True)
+        got = project_l1_pallas(v, 1.0, method=method, interpret=True)
         np.testing.assert_allclose(got, v, atol=1e-7)
+
+    def test_unknown_method_raises(self):
+        v = _rand((128,), seed=6)
+        with pytest.raises(ValueError, match="no pallas threshold kernel"):
+            project_l1_pallas(v, 1.0, method="sort", interpret=True)
+
+
+class TestFilterThresholdKernel:
+    """Parity of the Michelot filter kernel against the exact sort backend."""
+
+    @pytest.mark.parametrize("case", ["ties", "zeros", "feasible", "spike"])
+    def test_adversarial_parity(self, case):
+        rng = np.random.default_rng(21)
+        v = {
+            "ties": jnp.asarray(np.repeat(rng.normal(size=64), 4), jnp.float32),
+            "zeros": jnp.asarray(
+                np.concatenate([np.zeros(100), rng.normal(size=156)]), jnp.float32),
+            "feasible": jnp.asarray(rng.normal(size=256) * 1e-4, jnp.float32),
+            "spike": jnp.zeros((256,), jnp.float32).at[3].set(100.0),
+        }[case]
+        got = project_l1_pallas(v, 1.0, method="filter", interpret=True)
+        want = ball.project_l1(v, 1.0, method="sort")
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_matches_core_filter_backend(self):
+        # kernel and jnp backend implement the same fixed point
+        v = _rand((1000,), seed=33, scale=3.0)
+        got = project_l1_pallas(v, 2.5, method="filter", interpret=True)
+        want = ball.project_l1(v, 2.5, method="filter")
+        np.testing.assert_allclose(got, want, atol=1e-6)
 
 
 class TestBilevelFused:
@@ -81,6 +114,21 @@ class TestBilevelFused:
         # also against the core (sort-based) implementation
         from repro.core import bilevel
         np.testing.assert_allclose(got, bilevel.bilevel_l1inf(y, radius), atol=1e-4)
+
+    @pytest.mark.parametrize("method", ["sort", "bisect", "filter"])
+    def test_outer_method_selection(self, method):
+        # every outer-step backend (incl. the jnp fallback for "sort") agrees
+        y = _rand((300, 700), seed=9, scale=2.0)
+        got = ops.bilevel_l1inf(y, 2.0, method=method, interpret=True, force=True)
+        np.testing.assert_allclose(
+            got, ref.bilevel_l1inf_ref(y, 2.0, method="sort"), atol=1e-5)
+
+    @pytest.mark.parametrize("method", KERNEL_METHODS)
+    def test_fused_wrapper(self, method):
+        y = _rand((128, 256), seed=10, scale=2.0)
+        got = bilevel_l1inf_pallas(y, 1.5, method=method, interpret=True)
+        np.testing.assert_allclose(
+            got, ref.bilevel_l1inf_ref(y, 1.5, method="sort"), atol=1e-5)
 
     def test_feasibility(self):
         y = _rand((256, 512), seed=8, scale=3.0)

@@ -23,7 +23,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
     return res.stdout
 
 
+@pytest.mark.slow
 class TestShardedProjection:
+    """Subprocess mesh tests: minutes each on a single-core host (8 fake
+    devices force full shard_map compiles). Nightly CI runs them; the default
+    suite deselects via the ``slow`` marker."""
+
     def test_sharded_bilevel_matches_single_device(self):
         out = _run("""
         import jax, jax.numpy as jnp, numpy as np
