@@ -27,6 +27,7 @@ _JSON_NAMES = {
     "fig4": "BENCH_fig4_parallel.json",
     "table1": "BENCH_table1_scaling.json",
     "methods": "BENCH_projection_methods.json",
+    "plan": "BENCH_projection_plan.json",
     "sae": "BENCH_sae_tables.json",
 }
 
@@ -53,7 +54,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,table1,methods,sae")
+                    help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,sae")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -69,6 +70,7 @@ def main(argv=None) -> None:
         "fig3": lambda: projections.fig3_trilevel(full=args.full),
         "table1": lambda: projections.table1_scaling(full=args.full),
         "methods": lambda: projections.methods_sweep(full=args.full),
+        "plan": lambda: projections.plan_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
     }

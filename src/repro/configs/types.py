@@ -171,7 +171,9 @@ class ProjectionSpec:
     method: str = "bisect"        # l1 solver backend (core.ball registry:
                                   # "sort" | "bisect" | "filter"; bisect =
                                   # kernel/TPU friendly + differentiable,
-                                  # filter = linear-time CPU/throughput pick)
+                                  # filter = linear-time CPU/throughput pick;
+                                  # "auto" = autotuned per leaf workload by
+                                  # core.plan at hook build time)
     transpose: bool = False       # project the transposed trailing axes
                                   # (groups = rows, e.g. SAE feature selection)
     enabled: bool = True

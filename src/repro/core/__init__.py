@@ -32,6 +32,13 @@ from .exact_l1inf import (  # noqa: F401
     project_l1inf_exact_bisect,
 )
 from .masks import apply_mask, column_mask, element_sparsity, mask_tree, sparsity  # noqa: F401
+from .plan import (  # noqa: F401
+    PlanBackend,
+    ProjectionPlan,
+    best_l1_method,
+    make_plan,
+    register_plan_backend,
+)
 from .multilevel import (  # noqa: F401
     multilevel_norm,
     multilevel_project,

@@ -5,7 +5,7 @@ All functions are pure JAX (jit/vmap/grad-safe unless noted), operate on the
 *last* axis of the input unless stated otherwise, and accept a scalar or
 broadcastable ``radius``.
 
-Three ℓ1 algorithms are provided (see DESIGN.md §3 — hardware adaptation):
+Three ℓ1 algorithms are provided (see DESIGN.md §4 — hardware adaptation):
 
 * ``project_l1_sort``   — sort + prefix-sum threshold (Duchi et al. / Held et al.).
   O(n log n) work, O(log n) depth. Exact.
@@ -14,9 +14,10 @@ Three ℓ1 algorithms are provided (see DESIGN.md §3 — hardware adaptation):
   friendly variant. Accurate to ~2^-k of the value range.
 * ``project_l1_filter`` — Michelot/Condat filtering: a fixed-point iteration on θ
   over a shrinking active set (masking, no sorting). O(n) expected work, converges
-  in a handful of sweeps on typical data. Exact at the fixed point. Uses
-  ``lax.while_loop`` so it is jit/vmap-safe but not reverse-mode differentiable
-  (use ``bisect`` when you need gradients through the projection).
+  in a handful of sweeps on typical data. Exact at the fixed point. The
+  ``lax.while_loop`` only finds the active set (on stopped gradients); θ is
+  recomputed from it in closed form, so the backend is reverse-mode
+  differentiable like the others.
 
 All reduce to the simplex projection of |y| followed by sign restoration.
 
@@ -148,10 +149,31 @@ def _filter_theta(a: jax.Array, radius: jax.Array) -> jax.Array:
     return theta
 
 
+def _filter_theta_diff(a: jax.Array, radius: jax.Array) -> jax.Array:
+    """``_filter_theta`` made reverse-mode differentiable.
+
+    The ``while_loop`` (not transposable) runs entirely on stopped gradients —
+    it only has to FIND the active set. θ is then recomputed from that set as
+    a closed-form expression of ``(a, radius)``: θ = (Σ_{active} aᵢ - r)/#active.
+    The active set is locally constant in ``a``, so autodiff through the
+    recomputation yields the exact projection Jacobian (the same one the
+    ``sort`` backend's differentiable graph produces).
+    """
+    theta0 = _filter_theta(jax.lax.stop_gradient(a),
+                           jax.lax.stop_gradient(radius))
+    active = jax.lax.stop_gradient(a > theta0[..., None])
+    count = jnp.sum(active, axis=-1)
+    ssum = jnp.sum(jnp.where(active, a, 0.0), axis=-1)
+    r = jnp.broadcast_to(jnp.asarray(radius, a.dtype), ssum.shape)
+    theta = (ssum - r) / jnp.maximum(count, 1).astype(a.dtype)
+    # empty active set (radius ~ 0 edge): keep the loop's θ, it clips everything
+    return jnp.where(count > 0, theta, theta0)
+
+
 def simplex_threshold_filter(a: jax.Array, radius: Scalar) -> jax.Array:
     """Michelot/Condat filtering θ (ball contract: θ = -1 when inside)."""
     radius = jnp.asarray(radius, a.dtype)
-    theta = _filter_theta(a, radius)
+    theta = _filter_theta_diff(a, radius)
     inside = jnp.sum(a, axis=-1) <= radius
     return jnp.where(inside, jnp.full_like(theta, -1.0), theta)
 
@@ -205,7 +227,7 @@ def _simplex_theta_bisect(a: jax.Array, radius: Scalar) -> jax.Array:
 
 
 def _simplex_theta_filter(a: jax.Array, radius: Scalar) -> jax.Array:
-    return _filter_theta(a, jnp.asarray(radius, a.dtype))
+    return _filter_theta_diff(a, jnp.asarray(radius, a.dtype))
 
 
 _L1_METHODS: Dict[str, L1Method] = {}
@@ -257,7 +279,7 @@ register_l1_method("bisect", L1Method(
     complexity="O(k n), k=64 fixed", differentiable=True))
 register_l1_method("filter", L1Method(
     simplex_threshold_filter, _simplex_theta_filter,
-    complexity="O(n) expected", differentiable=False),
+    complexity="O(n) expected", differentiable=True),
     aliases=("michelot", "condat"))
 
 

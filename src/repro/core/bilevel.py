@@ -20,6 +20,8 @@ all per-norm dispatch is delegated to the tables in ``core.ball``.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -37,9 +39,20 @@ def _inner_project_cols(y: jax.Array, q, u: jax.Array, method: str) -> jax.Array
 
 
 def bilevel_project(y: jax.Array, radius, p=1, q=jnp.inf, method: str = "sort") -> jax.Array:
-    """BP^{p,q}_radius(Y) for a 2-D Y, aggregating columns (axis 0)."""
+    """BP^{p,q}_radius(Y) for a 2-D Y, aggregating columns (axis 0).
+
+    ``method="auto"``: a bi-level projection IS the two-level norm design
+    ν = [(q, 1), (p, 1)], so auto routes through the planner exactly like
+    ``multilevel_project`` (cached autotuned plan when eager, best generic
+    θ-solver for the aggregate length when traced).
+    """
     if y.ndim != 2:
         raise ValueError("bilevel_project expects a 2-D array; use bilevel_project_axes")
+    if method == "auto":
+        from . import multilevel
+
+        return multilevel.multilevel_project(y, [(q, 1), (p, 1)], radius,
+                                             method="auto")
     method = ball.resolve_method(method)
     v = ball.norm_reduce(y, q, axes=0)  # (m,) non-negative
     u = _outer_project(v, p, radius, method)
@@ -74,8 +87,16 @@ def bilevel_project_axes(y: jax.Array, radius, p=1, q=jnp.inf, *, inner_axes,
     ``inner_axes`` are aggregated by the q-norm (the "column" axes); all other
     axes index the groups whose aggregate is projected onto the p-ball.
     Equivalent to reshaping to 2-D, projecting, and reshaping back — but done
-    with broadcasting so it fuses well.
+    with broadcasting so it fuses well. ``method="auto"`` autotunes the outer
+    θ-solver on the aggregate-vector length (generic backends only — the
+    arbitrary-axes form has no fused kernel).
     """
+    if method == "auto":
+        from . import plan as _plan
+
+        inner = tuple(ax % y.ndim for ax in inner_axes)
+        n_outer = math.prod(d for a, d in enumerate(y.shape) if a not in inner)
+        method = _plan.best_l1_method(max(n_outer, 1), y.dtype)
     method = ball.resolve_method(method)
     inner_axes = tuple(a % y.ndim for a in inner_axes)
     v = ball.norm_reduce(y, q, axes=inner_axes)  # shape = outer dims

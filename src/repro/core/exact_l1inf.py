@@ -2,7 +2,7 @@
 
 The paper compares its bi-level projection against the exact projection of
 Chu et al. (ICML'20, semismooth Newton). We re-derive that algorithm in a
-TPU/JAX-idiomatic form (see DESIGN.md §3):
+TPU/JAX-idiomatic form (see DESIGN.md §4):
 
     minimize ½‖X-Y‖²  s.t.  Σ_j max_i |X_ij| ≤ η
 

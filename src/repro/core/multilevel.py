@@ -41,9 +41,30 @@ def _check_levels(shape, levels: Sequence[Level]):
             raise ValueError("each level must aggregate at least one axis")
 
 
+def _final_level_size(shape, levels: Sequence[Level]) -> int:
+    """Length of the vector the LAST level's θ-solver sees (autotune key)."""
+    _check_levels(shape, levels)
+    skip = sum(k for _, k in levels[:-1])
+    return math.prod(shape[skip:]) if shape[skip:] else 1
+
+
 def multilevel_project(y: jax.Array, levels: Sequence[Level], radius,
                        method: str = "sort") -> jax.Array:
-    """MP^ν_radius(Y) — recursive implementation of Algorithm 6."""
+    """MP^ν_radius(Y) — recursive implementation of Algorithm 6.
+
+    ``method="auto"`` routes through the projection planner (``core.plan``):
+    on a concrete array the cached, autotuned plan executes directly; under a
+    trace (inside an enclosing jit/vmap) the shape-autotuned best *generic*
+    θ-solver is inlined instead (specialized fused backends can't be embedded
+    in someone else's trace).
+    """
+    if method == "auto":
+        from . import plan as _plan
+
+        out = _plan.maybe_plan_call(y, levels, radius)
+        if out is not None:
+            return out
+        method = _plan.best_l1_method(_final_level_size(y.shape, levels), y.dtype)
     _check_levels(y.shape, levels)
     method = ball.resolve_method(method)
     (q, k), rest = levels[0], levels[1:]

@@ -11,7 +11,8 @@ with a weight matrix sharded column-wise over mesh axis ``axis_name``,
 versus the exact projection which needs the full matrix on one device
 (nm × 4 bytes of collective traffic). The all-gather'd payload is a factor n
 smaller — this is the paper's "exponential parallel speedup" realized as a
-collective-bytes reduction (DESIGN.md §3).
+collective-bytes reduction; DESIGN.md §3 ("The sharded bi-level split: a
+collective-bytes argument") derives the bound.
 
 These functions are written for use inside ``jax.shard_map``; the
 ``*_spmd`` wrappers build the shard_map for a given mesh. When the columns of
@@ -45,12 +46,27 @@ def bilevel_project_sharded(y_local: jax.Array, radius, p=1, q=jnp.inf,
 
 
 def make_sharded_bilevel(mesh, axis_name: str, p=1, q=jnp.inf, method: str = "sort"):
-    """shard_map'd bi-level projection: columns (axis 1) sharded over axis_name."""
-    method = ball.resolve_method(method)  # fail at build time, not inside shard_map
+    """shard_map'd bi-level projection: columns (axis 1) sharded over axis_name.
+
+    ``method="auto"`` autotunes the replicated outer θ-solve per gathered
+    aggregate length (the m of the first call) — resolved OUTSIDE shard_map,
+    once, so the per-call body stays collective-only.
+    """
+    if method != "auto":
+        method = ball.resolve_method(method)  # fail at build time, not in shard_map
+    resolved = {}
 
     def fn(y, radius):
+        if method == "auto":
+            from . import plan as _plan
+            key = (y.shape[1], jnp.asarray(y).dtype.name)
+            if key not in resolved:  # autotune once per (length, dtype)
+                resolved[key] = _plan.best_l1_method(key[0], key[1])
+            meth = resolved[key]
+        else:
+            meth = method
         body = functools.partial(
-            bilevel_project_sharded, p=p, q=q, axis_name=axis_name, method=method
+            bilevel_project_sharded, p=p, q=q, axis_name=axis_name, method=meth
         )
         return jax.shard_map(
             body,

@@ -7,4 +7,5 @@ interpret mode against it. ops.py holds the jit'd platform dispatchers.
 from .bilevel_l1inf import bilevel_l1inf_pallas, clip_pallas, colmax_pallas  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
 from .l1ball import KERNEL_METHODS, project_l1_pallas  # noqa: F401
-from . import ops, ref  # noqa: F401
+from .trilevel_l1infinf import trilevel_l1infinf_pallas  # noqa: F401
+from . import ops, plan_backends, ref  # noqa: F401

@@ -1,7 +1,7 @@
 """Pallas TPU kernels for the bi-level ℓ1,∞ projection (paper Algorithm 2).
 
 The projection is bandwidth-bound (O(1) FLOP/byte), so the kernels are tiled
-HBM→VMEM streaming passes (DESIGN.md §3):
+HBM→VMEM streaming passes (DESIGN.md §4):
 
   pass 1  colmax:  v[j]   = max_i |Y[i, j]|        (grid-reduced over row blocks)
   (tiny)  outer :  u      = P¹_η(v)                (jnp or the l1ball kernel)
@@ -63,12 +63,13 @@ def bilevel_l1inf_pallas(y: jax.Array, radius, *, method: str = "bisect",
     """Fused bi-level ℓ1,∞ projection: colmax → outer P¹ → clip, all Pallas.
 
     ``method`` selects the outer-step threshold kernel ("bisect" or the
-    linear-time "filter"); see kernels.l1ball.KERNEL_METHODS.
+    linear-time "filter"); anything else — or a vector past the single-block
+    VMEM limit — runs the outer solve on the jnp backend instead.
     """
-    from .l1ball import project_l1_pallas
+    from .l1ball import outer_l1_solve
 
     v = colmax_pallas(y, block_n=block_n, block_m=block_m, interpret=interpret)
-    u = project_l1_pallas(v, radius, method=method, interpret=interpret)
+    u = outer_l1_solve(v, radius, method=method, interpret=interpret)
     return clip_pallas(y, u, block_n=block_n, block_m=block_m, interpret=interpret)
 
 

@@ -3,7 +3,7 @@
 The outer step of the bi-level projection. Two in-VMEM algorithms:
 
 * ``bisect`` — k fixed iterations of soft-threshold + tree reduction. Serial
-  depth k·log n, fully VPU-shaped (DESIGN.md §3). Accuracy ~2^-k.
+  depth k·log n, fully VPU-shaped (DESIGN.md §4). Accuracy ~2^-k.
 * ``filter`` — Michelot/Condat filtering: a ``lax.while_loop`` fixed point on
   the threshold θ over a shrinking active set (masking, no sorting). Converges
   exactly in a handful of sweeps on typical data — O(n) expected work versus
@@ -95,13 +95,26 @@ def _l1ball_filter_kernel(v_ref, radius_ref, out_ref, *, n_total: int, iters: in
 
 
 # threshold-kernel dispatch — keyed by the core.ball backend names ("sort" has
-# no VPU mapping; ops.py routes it to the jnp oracle instead)
+# no VPU mapping; outer_l1_solve routes it to the jnp oracle instead)
 _THRESHOLD_KERNELS = {
     "bisect": _l1ball_bisect_kernel,
     "filter": _l1ball_filter_kernel,
 }
 
 KERNEL_METHODS = tuple(sorted(_THRESHOLD_KERNELS))
+
+# vectors larger than this stay on the jnp path (single-block VMEM kernel limit)
+L1_KERNEL_MAX = 512 * 1024
+
+
+def outer_l1_solve(v: jax.Array, radius, *, method: str = "bisect",
+                   interpret: bool = False) -> jax.Array:
+    """The fused kernels' outer θ-solve: VMEM kernel when ``method`` has one
+    and ``v`` fits a single block, jnp backend otherwise."""
+    if v.shape[0] <= L1_KERNEL_MAX and method in KERNEL_METHODS:
+        return project_l1_pallas(v, radius, method=method, interpret=interpret)
+    from .ref import project_l1_ref
+    return project_l1_ref(v, radius, method=method)
 
 
 def project_l1_pallas(v: jax.Array, radius, *, method: str = "bisect",

@@ -10,15 +10,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
-from .bilevel_l1inf import clip_pallas, colmax_pallas
+from .bilevel_l1inf import bilevel_l1inf_pallas
 from .flash_attention import flash_attention
-from .l1ball import KERNEL_METHODS, project_l1_pallas
-
-# vectors larger than this stay on the jnp path (single-block VMEM kernel limit)
-_L1_KERNEL_MAX = 512 * 1024
+from .trilevel_l1infinf import trilevel_l1infinf_pallas
 
 
 def use_pallas() -> bool:
@@ -36,13 +32,23 @@ def bilevel_l1inf(y: jax.Array, radius, *, method: str = "bisect",
     (with ``interpret=True`` on CPU: the per-kernel correctness tests).
     """
     if force or use_pallas():
-        v = colmax_pallas(y, interpret=interpret)
-        if v.shape[0] <= _L1_KERNEL_MAX and method in KERNEL_METHODS:
-            u = project_l1_pallas(v, radius, method=method, interpret=interpret)
-        else:
-            u = ref.project_l1_ref(v, radius, method=method)
-        return clip_pallas(y, u, interpret=interpret)
+        return bilevel_l1inf_pallas(y, radius, method=method,
+                                    interpret=interpret)
     return ref.bilevel_l1inf_ref(y, radius, method=method)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret", "force"))
+def trilevel_l1infinf(y: jax.Array, radius, *, method: str = "bisect",
+                      interpret: bool = False, force: bool = False) -> jax.Array:
+    """Tri-level ℓ1,∞,∞ projection — fused Pallas on TPU, jnp oracle elsewhere.
+
+    Same contract as ``bilevel_l1inf``: ``method`` picks the outer θ-solve,
+    ``force=True`` routes through the kernels regardless of platform.
+    """
+    if force or use_pallas():
+        return trilevel_l1infinf_pallas(y, radius, method=method,
+                                        interpret=interpret)
+    return ref.trilevel_l1infinf_ref(y, radius, method=method)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "interpret", "force"))

@@ -26,6 +26,13 @@ def bilevel_l1inf_ref(y: jax.Array, radius, method: str = "bisect") -> jax.Array
     return clip_ref(y, u)
 
 
+def trilevel_l1infinf_ref(y: jax.Array, radius, method: str = "bisect") -> jax.Array:
+    """Tri-level ℓ1,∞,∞ oracle — the unfused core.multilevel recursion."""
+    from repro.core import multilevel
+
+    return multilevel.trilevel_l1infinf(y, radius, method=method)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
                         scale: float | None = None) -> jax.Array:
     """Reference multi-head attention: q,k,v are (B, H, S, D) (H may differ for

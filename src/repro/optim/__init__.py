@@ -9,4 +9,9 @@ from .adamw import (  # noqa: F401
     state_specs,
     update,
 )
-from .projection_hook import apply_projection, project_tree, tree_sparsity  # noqa: F401
+from .projection_hook import (  # noqa: F401
+    apply_projection,
+    make_projection_hook,
+    project_tree,
+    tree_sparsity,
+)

@@ -24,6 +24,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.types import ProjectionSpec
 from repro.core import ball, multilevel
@@ -35,6 +36,35 @@ def _path_str(path) -> str:
     for p in path:
         parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
     return "/".join(parts)
+
+
+def _method_resolver(spec: ProjectionSpec):
+    """Per-leaf θ-solver resolution, done ONCE per hook (not per step/trace).
+
+    Fixed names validate through the registry immediately; ``"auto"`` is
+    resolved per distinct final-level vector length via the planner's
+    ``best_l1_method`` (shape-only, so it works while tracing too) and
+    memoised — the micro-benchmark runs once per (length, dtype), ever.
+    """
+    if spec.method != "auto":
+        method = ball.resolve_method(spec.method)  # config errors surface once
+        return lambda shape, dtype: method
+
+    need = sum(k for _, k in spec.levels)
+    cache = {}
+
+    def resolve(shape, dtype):
+        trailing = shape[-need:]
+        if spec.transpose:
+            trailing = tuple(reversed(trailing))
+        n_final = multilevel._final_level_size(trailing, spec.levels)
+        key = (n_final, np.dtype(dtype).name)
+        if key not in cache:
+            from repro.core import plan
+            cache[key] = plan.best_l1_method(n_final, dtype)
+        return cache[key]
+
+    return resolve
 
 
 def _project_leaf(w, levels, radius, method, transpose=False):
@@ -56,16 +86,51 @@ def _project_leaf(w, levels, radius, method, transpose=False):
     return fn(w)
 
 
+def make_projection_hook(spec: ProjectionSpec | None):
+    """Build the training-time projection hook ONCE (planner lifecycle,
+    DESIGN.md §2): compile the regex, validate/resolve the θ-solver backend
+    (including ``method="auto"`` via the planner — autotuned per distinct leaf
+    workload, memoised forever), and return ``hook(params, step)`` for the
+    train step to call every iteration. Per-step/per-trace cost is zero beyond
+    the projection itself.
+    """
+    if spec is None or not spec.enabled:
+        return lambda params, step: params
+    pat = re.compile(spec.pattern)
+    need = sum(k for _, k in spec.levels)
+    resolve = _method_resolver(spec)
+
+    def project_all(params):
+        def one(path, w):
+            name = _path_str(path)
+            if w.ndim >= need and pat.search(name):
+                method = resolve(w.shape, w.dtype)
+                return _project_leaf(w, spec.levels, spec.radius, method,
+                                     transpose=spec.transpose).astype(w.dtype)
+            return w
+
+        return jax.tree_util.tree_map_with_path(one, params)
+
+    def hook(params, step):
+        if spec.every <= 1:
+            return project_all(params)
+        return jax.lax.cond(step % spec.every == 0, project_all,
+                            lambda p: p, params)
+
+    return hook
+
+
 def project_tree(params, spec: ProjectionSpec):
     """Unconditionally project matched leaves (jit-safe)."""
     pat = re.compile(spec.pattern)
     need = sum(k for _, k in spec.levels)
-    method = ball.resolve_method(spec.method)  # config errors surface here once
+    resolve = _method_resolver(spec)  # config errors surface here once
 
     def one(path, w):
         name = _path_str(path)
         if w.ndim >= need and pat.search(name):
-            return _project_leaf(w, spec.levels, spec.radius, method,
+            return _project_leaf(w, spec.levels, spec.radius,
+                                 resolve(w.shape, w.dtype),
                                  transpose=spec.transpose).astype(w.dtype)
         return w
 
@@ -73,14 +138,12 @@ def project_tree(params, spec: ProjectionSpec):
 
 
 def apply_projection(params, spec: ProjectionSpec, step):
-    """Project every ``spec.every`` steps (cheap lax.cond otherwise)."""
-    if spec is None or not spec.enabled:
-        return params
-    if spec.every <= 1:
-        return project_tree(params, spec)
-    return jax.lax.cond(step % spec.every == 0,
-                        lambda p: project_tree(p, spec),
-                        lambda p: p, params)
+    """Project every ``spec.every`` steps (cheap lax.cond otherwise).
+
+    One-shot form of :func:`make_projection_hook` — prefer the hook in loops
+    so the regex/method resolution happens once at build.
+    """
+    return make_projection_hook(spec)(params, step)
 
 
 def matched_names(params, spec: ProjectionSpec):

@@ -1,2 +1,4 @@
-"""repro.serving — prefill/decode serve steps + batched request engine."""
+"""repro.serving — prefill/decode serve steps, batched request engine, and
+the plan-batched projection service."""
 from .engine import generate, make_decode_step, make_prefill  # noqa: F401
+from .projection_service import ProjectionService  # noqa: F401

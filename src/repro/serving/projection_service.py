@@ -1,0 +1,134 @@
+"""Projection as a served workload: batch heterogeneous requests by plan key.
+
+A request is one tensor + norm design + radius. The service groups pending
+requests whose *plan key* matches — same shape, dtype, canonical levels, and
+backend — stacks each group along a fresh leading axis, and executes it with
+ONE vmap'd planner executable (``radius_kind="batch"``, per-request radii).
+Heterogeneous traffic therefore costs one dispatch per distinct workload
+shape instead of one per request, and every dispatch reuses the planner's
+cached, autotuned executable (DESIGN.md §2). Group batches are padded to the
+next power of two before stacking, so varying traffic re-traces the batch
+executable only O(log max-group) times, not once per distinct group size.
+
+Typical use (see docs/api.md for a runnable version):
+
+    svc = ProjectionService()                       # method="auto"
+    t1 = svc.submit(w1, [("inf", 1), ("1", 1)], radius=1.0)
+    t2 = svc.submit(w2, [("inf", 1), ("1", 1)], radius=2.0)   # same shape: batched
+    t3 = svc.submit(w3, [("1", 1)], radius=1.0)                # own group
+    svc.flush()
+    x1 = svc.result(t1)
+
+Single-shot convenience: ``svc.project(y, levels, radius)``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import multilevel
+from repro.core import plan as planmod
+
+# (shape, dtype name, canonical levels, requested method)
+GroupKey = Tuple[Tuple[int, ...], str, Tuple[Tuple[str, int], ...], str]
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n — group batches are padded up to a bucket size so
+    the vmap'd executable re-traces O(log max-batch) times, not once per
+    distinct group size."""
+    return 1 << (n - 1).bit_length()
+
+
+class ProjectionService:
+    """Batches projection requests by plan key and executes them vmap'd.
+
+    ``method`` is the default backend request for every submit (``"auto"``
+    autotunes per workload); a per-request ``method=`` overrides it — requests
+    with different backends never share a batch.
+    """
+
+    def __init__(self, *, method: str = planmod.AUTO):
+        self.default_method = method
+        self._pending: Dict[GroupKey, List[Tuple[int, jax.Array, jax.Array]]] = {}
+        self._results: Dict[int, jax.Array] = {}
+        self._next_ticket = 0
+        self.stats = {"submitted": 0, "executed_batches": 0,
+                      "batched_requests": 0, "flushes": 0}
+
+    def submit(self, y, levels, radius=1.0, *, method: str | None = None) -> int:
+        """Queue one projection; returns a ticket for :meth:`result`."""
+        y = jnp.asarray(y)
+        levels = planmod.canonical_levels(levels)
+        # reject bad requests HERE, where the caller can handle it — a raise
+        # inside flush() would abort a whole batch for one bad ticket
+        multilevel._check_levels(y.shape, levels)
+        requested = self.default_method if method is None else method
+        requested = planmod.validate_backend(y.shape, y.dtype, levels,
+                                             requested)
+        radius = jnp.asarray(radius, y.dtype)
+        if radius.ndim != 0:
+            raise ValueError(
+                f"radius must be a scalar (one per request), got shape "
+                f"{radius.shape}")
+        key: GroupKey = (y.shape, y.dtype.name, levels, requested)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.setdefault(key, []).append((ticket, y, radius))
+        self.stats["submitted"] += 1
+        return ticket
+
+    def pending(self) -> int:
+        """Number of queued (unflushed) requests."""
+        return sum(len(v) for v in self._pending.values())
+
+    def flush(self) -> None:
+        """Execute every pending group (one vmap'd dispatch per group)."""
+        for key in list(self._pending):
+            (shape, dtype, levels, method), reqs = key, self._pending.pop(key)
+            try:
+                if len(reqs) == 1:
+                    ticket, y, radius = reqs[0]
+                    p = planmod.make_plan(shape, dtype, levels, method=method)
+                    self._results[ticket] = p(y, radius)
+                else:
+                    p = planmod.make_plan(shape, dtype, levels,
+                                          radius_kind="batch", method=method)
+                    pad = _bucket(len(reqs)) - len(reqs)
+                    ys = jnp.stack([y for _, y, _ in reqs]
+                                   + [reqs[-1][1]] * pad)
+                    radii = jnp.stack([r for _, _, r in reqs]
+                                      + [reqs[-1][2]] * pad)
+                    out = p(ys, radii)
+                    for i, (ticket, _, _) in enumerate(reqs):
+                        self._results[ticket] = out[i]
+                    self.stats["batched_requests"] += len(reqs)
+            except Exception:
+                # keep the failed group queued (its tickets stay retryable);
+                # groups already executed this flush stay executed
+                self._pending[key] = reqs
+                raise
+            self.stats["executed_batches"] += 1
+        self.stats["flushes"] += 1
+
+    def result(self, ticket: int) -> jax.Array:
+        """Projected tensor for a flushed ticket — single read: the result is
+        removed on return. KeyError for an unknown, unflushed, or
+        already-claimed ticket."""
+        return self._results.pop(ticket)
+
+    def discard(self, ticket: int) -> None:
+        """Drop a flushed result that will never be claimed (no-op if absent).
+
+        Long-running callers should discard abandoned tickets (e.g. client
+        timeouts) — unclaimed results are otherwise held indefinitely."""
+        self._results.pop(ticket, None)
+
+    def project(self, y, levels, radius=1.0, *, method: str | None = None):
+        """submit + flush + result in one call (single-request convenience)."""
+        ticket = self.submit(y, levels, radius, method=method)
+        self.flush()
+        return self.result(ticket)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.types import ArchConfig, TrainConfig
 from repro.optim import adamw
-from repro.optim.projection_hook import apply_projection
+from repro.optim.projection_hook import make_projection_hook
 
 
 def xent(logits, targets):
@@ -66,6 +66,9 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
     loss_fn = make_loss_fn(cfg, api, impl=impl, n_groups=n_groups,
                            remat=tcfg.remat, compute_dtype=compute_dtype,
                            act_spec=act_spec, logits_spec=logits_spec)
+    # plan the projection ONCE at step-build time (regex + backend resolution,
+    # incl. method="auto" autotuning) — the per-step call is just the math
+    project = make_projection_hook(tcfg.projection)
 
     def train_step(state, batch):
         params = state["params"]
@@ -92,8 +95,7 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
         new_params, new_opt, metrics = adamw.update(grads, state["opt"], params,
                                                     tcfg)
         # the paper's constraint: project back onto the norm ball
-        new_params = apply_projection(new_params, tcfg.projection,
-                                      new_opt["step"])
+        new_params = project(new_params, new_opt["step"])
         # keep the master copy consistent with the projected params
         if "master" in new_opt and tcfg.projection is not None \
                 and tcfg.projection.enabled:

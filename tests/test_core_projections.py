@@ -137,9 +137,26 @@ class TestBackendRegistry:
             core.resolve_method("quickselect")
 
     def test_method_info(self):
-        assert core.method_info("filter").differentiable is False
+        assert core.method_info("filter").differentiable is True
         assert core.method_info("sort").differentiable is True
         assert "n" in core.method_info("bisect").complexity
+
+    @pytest.mark.parametrize("radius", [1.5, 1000.0])  # shrinking / identity
+    def test_filter_grad_matches_sort(self, radius):
+        # filter is exactly differentiable: the while_loop only finds the
+        # support, θ is recomputed in closed form, so its Jacobian equals the
+        # sort graph's (bisect is grad-SAFE but its 64-step graph's Jacobian
+        # is only approximate — checked finite below, not exact)
+        y = _rand((100,), seed=11, scale=2.0)
+
+        def loss(y, m):
+            return jnp.sum(jnp.cos(core.project_l1(y, radius, method=m)))
+
+        g_want = jax.grad(lambda y: loss(y, "sort"))(y)
+        g_filter = jax.grad(lambda y: loss(y, "filter"))(y)
+        np.testing.assert_allclose(g_filter, g_want, atol=1e-6)
+        g_bisect = jax.grad(lambda y: loss(y, "bisect"))(y)
+        assert bool(jnp.all(jnp.isfinite(g_bisect)))
 
     def test_register_new_backend(self):
         from repro.core.ball import L1Method, simplex_threshold_sort

@@ -12,6 +12,7 @@ from repro.kernels.bilevel_l1inf import (bilevel_l1inf_pallas, clip_pallas,
                                          colmax_pallas)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.l1ball import KERNEL_METHODS, project_l1_pallas
+from repro.kernels.trilevel_l1infinf import trilevel_l1infinf_pallas
 
 
 def _rand(shape, seed=0, dtype=jnp.float32, scale=1.0):
@@ -134,6 +135,54 @@ class TestBilevelFused:
         y = _rand((256, 512), seed=8, scale=3.0)
         got = ops.bilevel_l1inf(y, 2.0, interpret=True, force=True)
         assert float(jnp.sum(jnp.max(jnp.abs(got), axis=0))) <= 2.0 * (1 + 1e-4)
+
+
+class TestTrilevelFused:
+    """Fused tri-level ℓ1,∞,∞ kernel vs the core.multilevel recursion."""
+
+    @pytest.mark.parametrize("shape", [(2, 8, 128), (3, 17, 130), (8, 250, 64),
+                                       (1, 64, 257)])
+    @pytest.mark.parametrize("radius", [0.5, 2.0])
+    def test_matches_oracle(self, shape, radius):
+        y = _rand(shape, seed=hash(shape) % 2**31, scale=2.0)
+        got = trilevel_l1infinf_pallas(y, radius, interpret=True)
+        np.testing.assert_allclose(got, ref.trilevel_l1infinf_ref(y, radius),
+                                   atol=1e-5)
+
+    def test_reduce_pass_produces_both_aggregates(self):
+        from repro.kernels.trilevel_l1infinf import trilevel_reduce_pallas
+        y = _rand((4, 300, 700), seed=17, scale=2.0)
+        v2, v1 = trilevel_reduce_pallas(y, interpret=True)
+        np.testing.assert_allclose(v2, jnp.max(jnp.abs(y), axis=0), atol=1e-6)
+        np.testing.assert_allclose(v1, jnp.max(jnp.abs(y), axis=(0, 1)),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("method", ["sort", "bisect", "filter"])
+    def test_outer_method_selection(self, method):
+        # kernel θ-solvers and the jnp fallback ("sort") all agree
+        y = _rand((3, 64, 200), seed=18, scale=2.0)
+        got = ops.trilevel_l1infinf(y, 1.5, method=method, interpret=True,
+                                    force=True)
+        np.testing.assert_allclose(
+            got, ref.trilevel_l1infinf_ref(y, 1.5, method="sort"), atol=1e-5)
+
+    def test_block_shape_sweep(self):
+        y = _rand((2, 500, 260), seed=19, scale=2.0)
+        want = ref.trilevel_l1infinf_ref(y, 1.0)
+        for bn, bm in [(8, 128), (64, 256), (256, 512), (512, 1024)]:
+            got = trilevel_l1infinf_pallas(y, 1.0, block_n=bn, block_m=bm,
+                                           interpret=True)
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_feasibility_and_dispatch(self):
+        y = _rand((4, 100, 256), seed=20, scale=3.0)
+        got = ops.trilevel_l1infinf(y, 2.0, interpret=True, force=True)
+        from repro.core import multilevel
+        lv = [(jnp.inf, 1), (jnp.inf, 1), (1, 1)]
+        assert float(multilevel.multilevel_norm(got, lv)) <= 2.0 * (1 + 1e-4)
+        # CPU (no force): the jnp oracle path
+        np.testing.assert_allclose(ops.trilevel_l1infinf(y, 2.0),
+                                   ref.trilevel_l1infinf_ref(y, 2.0), atol=1e-6)
 
 
 # ------------------------------------------------------------- flash attention

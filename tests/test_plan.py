@@ -1,0 +1,187 @@
+"""Projection planner (core.plan): correctness vs the unplanned recursion,
+the multilevel edge cases the planner must validate, autotune behavior, and
+plan/executable cache semantics (second call does not re-trace)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ball, bilevel, multilevel, plan
+
+BILEVEL = [("inf", 1), ("1", 1)]
+TRILEVEL = [("inf", 1), ("inf", 1), ("1", 1)]
+
+
+def _rand(shape, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_planner():
+    plan.clear_cache()
+    yield
+    plan.clear_cache()
+
+
+class TestMakePlan:
+    @pytest.mark.parametrize("method", ["sort", "bisect", "filter"])
+    @pytest.mark.parametrize("shape,levels", [
+        ((6, 10), BILEVEL),
+        ((3, 6, 10), TRILEVEL),
+        ((4, 5), [("2", 1), ("1", 1)]),
+    ])
+    def test_matches_multilevel(self, shape, levels, method):
+        y = _rand(shape, seed=hash((shape, method)) % 2**31)
+        p = plan.make_plan(shape, jnp.float32, levels, method=method)
+        want = multilevel.multilevel_project(y, levels, 1.5, method=method)
+        np.testing.assert_allclose(p(y, 1.5), want, atol=1e-5)
+
+    def test_auto_matches_fixed(self):
+        y = _rand((6, 10), seed=1)
+        p = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="auto")
+        assert p.method in ball.available_methods()
+        assert set(p.timings_us) >= set(ball.available_methods())
+        want = multilevel.multilevel_project(y, BILEVEL, 1.0, method=p.method)
+        np.testing.assert_allclose(p(y, 1.0), want, atol=1e-5)
+
+    def test_degenerate_single_level(self):
+        # |ν| = 1: the plan is the classical flat projection (Prop 6.3)
+        y = _rand((4, 8), seed=2)
+        p = plan.make_plan((4, 8), jnp.float32, [("1", 2)], method="sort")
+        want = ball.project_l1(y.reshape(-1), 1.0).reshape(4, 8)
+        np.testing.assert_allclose(p(y, 1.0), want, atol=1e-6)
+
+    @pytest.mark.parametrize("method", ["sort", "bisect", "filter"])
+    def test_radius_zero_projects_to_origin(self, method):
+        y = _rand((5, 7), seed=3)
+        p = plan.make_plan((5, 7), jnp.float32, BILEVEL, method=method)
+        np.testing.assert_allclose(p(y, 0.0), jnp.zeros((5, 7)), atol=1e-6)
+
+    @pytest.mark.parametrize("method", ["sort", "bisect", "filter"])
+    def test_ties_at_the_max(self, method):
+        # a level whose ∞-reduce sees exact ties must stay exact + feasible
+        y = jnp.asarray([[2.0, 2.0, -2.0], [2.0, -2.0, 2.0]], jnp.float32)
+        p = plan.make_plan((2, 3), jnp.float32, BILEVEL, method=method)
+        got = p(y, 1.0)
+        want = multilevel.multilevel_project(y, BILEVEL, 1.0, method="sort")
+        np.testing.assert_allclose(got, want, atol=1e-5)
+        assert float(multilevel.multilevel_norm(got, BILEVEL)) <= 1.0 + 1e-5
+
+    def test_batch_radius_kind(self):
+        ys = jnp.stack([_rand((4, 6), seed=s) for s in range(3)])
+        radii = jnp.asarray([0.5, 1.0, 2.0], jnp.float32)
+        p = plan.make_plan((4, 6), jnp.float32, BILEVEL,
+                           radius_kind="batch", method="sort")
+        out = p(ys, radii)
+        for i in range(3):
+            want = multilevel.multilevel_project(ys[i], BILEVEL, radii[i],
+                                                 method="sort")
+            np.testing.assert_allclose(out[i], want, atol=1e-6)
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="covers"):
+            plan.make_plan((4, 6, 2), jnp.float32, BILEVEL)
+        with pytest.raises(ValueError, match="unknown projection backend"):
+            plan.make_plan((4, 6), jnp.float32, BILEVEL, method="nope")
+        with pytest.raises(ValueError, match="radius_kind"):
+            plan.make_plan((4, 6), jnp.float32, BILEVEL, radius_kind="maybe")
+        with pytest.raises(ValueError, match="not available"):
+            # fused kernel ineligible off-TPU without interpret
+            plan.make_plan((4, 6), jnp.float32, BILEVEL, method="fused_bilevel")
+        p = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        with pytest.raises(ValueError, match="built for shape"):
+            p(jnp.zeros((4, 7)), 1.0)
+        with pytest.raises(ValueError, match="built for dtype"):
+            p(jnp.zeros((4, 6), jnp.bfloat16), 1.0)
+
+
+class TestPlanCache:
+    def test_plan_cache_hit_returns_same_object(self):
+        p1 = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        p2 = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        assert p1 is p2
+
+    def test_second_call_does_not_retrace(self):
+        y = _rand((4, 6), seed=4)
+        p = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        p(y, 1.0)
+        assert p.trace_count == 1
+        p(y, 2.0)
+        p(y + 1.0, 0.5)
+        assert p.trace_count == 1  # same shape/dtype: cached lowering reused
+
+    def test_auto_shares_winner_executable(self):
+        y = _rand((4, 6), seed=5)
+        pa = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto")
+        traces_after_autotune = pa.trace_count
+        assert traces_after_autotune == 1  # autotune itself traced it once
+        pf = plan.make_plan((4, 6), jnp.float32, BILEVEL, method=pa.method)
+        pa(y, 1.0)
+        pf(y, 1.0)
+        assert pa.trace_count == traces_after_autotune  # shared, no re-trace
+        assert pf.trace_count == pa.trace_count
+
+    def test_auto_winner_cached(self):
+        pa = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto")
+        info = plan.cache_info()
+        assert info["auto_winners"] == 1
+        pb = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto")
+        assert pa is pb
+        assert plan.cache_info()["auto_winners"] == 1
+
+    def test_clear_cache(self):
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        assert plan.cache_info()["plans"] == 1
+        plan.clear_cache()
+        assert plan.cache_info() == {"plans": 0, "executables": 0,
+                                     "auto_winners": 0}
+
+
+class TestAutoThreading:
+    def test_multilevel_auto_eager(self):
+        y = _rand((3, 6, 10), seed=6)
+        got = multilevel.multilevel_project(y, TRILEVEL, 1.0, method="auto")
+        want = multilevel.multilevel_project(y, TRILEVEL, 1.0, method="sort")
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_multilevel_auto_under_jit(self):
+        y = _rand((6, 10), seed=7)
+        fn = jax.jit(lambda y: multilevel.multilevel_project(
+            y, BILEVEL, 1.0, method="auto"))
+        want = multilevel.multilevel_project(y, BILEVEL, 1.0, method="sort")
+        np.testing.assert_allclose(fn(y), want, atol=1e-5)
+
+    def test_bilevel_auto(self):
+        y = _rand((6, 10), seed=8)
+        got = bilevel.bilevel_l1inf(y, 1.0, method="auto")
+        want = bilevel.bilevel_l1inf(y, 1.0, method="sort")
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_bilevel_axes_auto(self):
+        y = _rand((5, 4, 6), seed=9)
+        got = bilevel.bilevel_project_axes(y, 1.0, inner_axes=(1,),
+                                           method="auto")
+        want = bilevel.bilevel_project_axes(y, 1.0, inner_axes=(1,),
+                                            method="sort")
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_best_l1_method_is_generic(self):
+        assert plan.best_l1_method(512) in ball.available_methods()
+
+
+class TestFusedBackendPlans:
+    def test_fused_trilevel_via_plan(self):
+        y = _rand((3, 17, 130), seed=10)
+        p = plan.make_plan((3, 17, 130), jnp.float32, TRILEVEL,
+                           method="fused_trilevel", interpret=True)
+        want = multilevel.trilevel_l1infinf(y, 1.0, method="bisect")
+        np.testing.assert_allclose(p(y, 1.0), want, atol=1e-5)
+
+    def test_fused_bilevel_via_plan(self):
+        y = _rand((16, 130), seed=11)
+        p = plan.make_plan((16, 130), jnp.float32, BILEVEL,
+                           method="fused_bilevel", interpret=True)
+        want = bilevel.bilevel_l1inf(y, 1.0, method="bisect")
+        np.testing.assert_allclose(p(y, 1.0), want, atol=1e-5)
