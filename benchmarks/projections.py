@@ -200,6 +200,92 @@ def plan_sweep(full=False):
     return out
 
 
+_SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import (multilevel_project, multilevel_project_sharded,
+                        sharded_collective_bytes)
+
+FULL = json.loads(sys.argv[1])
+def _time(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+mesh = jax.make_mesh((8,), ("model",))
+n, m = (1000, 10000) if FULL else (256, 2048)
+d = 32 if FULL else 8
+designs = [
+    ("bilevel_l1inf",    (n, m),      [("inf",1),("1",1)],          P(None, "model")),
+    ("trilevel_l1infinf",(d, n//4, m),[("inf",1),("inf",1),("1",1)],P(None, None, "model")),
+    ("bilevel_l12_axis0",(m, n),      [("2",1),("1",1)],            P("model", None)),
+]
+rows = []
+rng = np.random.default_rng(7)
+for name, shape, levels, spec in designs:
+    y = jnp.asarray(rng.uniform(0, 1, shape), jnp.float32)
+    ys = jax.device_put(y, NamedSharding(mesh, spec))
+    sched_fn = jax.jit(lambda v, r, levels=levels, spec=spec:
+                       multilevel_project_sharded(v, levels, r, mesh=mesh,
+                                                  spec=spec, method="sort"))
+    gather_fn = jax.jit(lambda v, r, levels=levels:
+                        multilevel_project(v, levels, r, method="sort"),
+                        out_shardings=NamedSharding(mesh, spec))
+    r = jnp.float32(2.0)
+    diff = float(jnp.abs(sched_fn(ys, r) - gather_fn(ys, r)).max())
+    assert diff < 1e-4, (name, diff)
+    t_sched = _time(sched_fn, ys, r)
+    t_gather = _time(gather_fn, ys, r)
+    cb = sharded_collective_bytes(shape, levels, spec, mesh)
+    rows.append([f"sharded_schedule_{name}", t_sched,
+                 f"coll_bytes={cb['schedule_bytes']},"
+                 f"bytes_ratio={cb['ratio']:.0f}x,"
+                 f"speedup_vs_gather={t_gather / t_sched:.2f}"])
+    rows.append([f"sharded_gather_{name}", t_gather,
+                 f"coll_bytes={cb['gather_bytes']},shape={shape}"])
+    per = ";".join(f"{s['step']}:{s['bytes']}" for s in cb["per_step"])
+    rows.append([f"sharded_bytes_{name}", float(cb["schedule_bytes"]), per])
+print("ROWS" + json.dumps(rows))
+"""
+
+
+def sharded_sweep(full=False):
+    """``--only sharded``: the generalized DESIGN.md §3 argument, measured.
+
+    Runs in a subprocess with a forced 8-device host mesh (the parent process
+    must keep its single device). Per norm design: steady-state wall-clock of
+    the schedule executor vs. jitted gather-and-project (GSPMD) on the same
+    committed sharded input, plus the analytic per-level collective payload
+    of both — the ``bytes_ratio`` is the aggregated-extent factor of
+    Proposition 6.4. The ``sharded_bytes_*`` rows carry the per-step payload
+    breakdown in ``derived``.
+    """
+    import json as _json
+    import os
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", "src")
+    res = subprocess.run(
+        [_sys.executable, "-c", _SHARDED_CHILD, _json.dumps(bool(full))],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if res.returncode != 0:
+        raise RuntimeError(f"sharded sweep failed:\n{res.stderr[-3000:]}")
+    payload = res.stdout.split("ROWS", 1)[1]
+    return [(name, us, derived) for name, us, derived in _json.loads(payload)]
+
+
 def table1_scaling(full=False):
     """Empirical complexity fit (Table 1): log-log slope of time vs nm."""
     sizes = ((200, 200), (400, 400), (800, 800), (1600, 1600)) if not full \

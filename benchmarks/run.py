@@ -28,6 +28,7 @@ _JSON_NAMES = {
     "table1": "BENCH_table1_scaling.json",
     "methods": "BENCH_projection_methods.json",
     "plan": "BENCH_projection_plan.json",
+    "sharded": "BENCH_sharded_multilevel.json",
     "sae": "BENCH_sae_tables.json",
 }
 
@@ -54,7 +55,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,sae")
+                    help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
+                         "sharded,sae")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -71,6 +73,7 @@ def main(argv=None) -> None:
         "table1": lambda: projections.table1_scaling(full=args.full),
         "methods": lambda: projections.methods_sweep(full=args.full),
         "plan": lambda: projections.plan_sweep(full=args.full),
+        "sharded": lambda: projections.sharded_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
     }

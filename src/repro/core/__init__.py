@@ -46,8 +46,19 @@ from .multilevel import (  # noqa: F401
     trilevel_l1infinf,
     work_depth,
 )
+from .schedule import (  # noqa: F401
+    ApplyGroup,
+    OuterSolve,
+    ReduceLevel,
+    Schedule,
+    compile_schedule,
+)
 from .sharded import (  # noqa: F401
     bilevel_project_sharded,
+    make_schedule_body,
     make_sharded_bilevel,
+    make_sharded_trilevel,
+    multilevel_project_sharded,
+    sharded_collective_bytes,
     trilevel_project_sharded,
 )

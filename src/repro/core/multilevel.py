@@ -10,6 +10,11 @@ remains). Examples for Y ∈ R^{c,n,m}:
     ν = [(1, 3)]                      — |ν| = 1 → the usual flat ℓ1 projection
                                         (Proposition 6.3: MP generalizes P)
 
+Algorithm 6's recursion is compiled to a flat reduce → solve → apply schedule
+(``core.schedule``) and executed from that — the same schedule the mesh
+executor (``core.sharded``) runs under shard_map and the fused Pallas planner
+backends pattern-match.
+
 Complexity: work = O(Π d) (one touch per element per level boundary it lives
 under), depth with infinite parallelism = O(Σ levels' reduction depths) —
 Proposition 6.4's exponential speedup; on a TPU mesh the outer levels shrink
@@ -25,38 +30,30 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import ball
+from . import ball, schedule as sched_mod
 
 Level = Tuple[object, int]  # (norm ∈ {1,2,'inf',jnp.inf}, number of leading axes)
 
 
 def _check_levels(shape, levels: Sequence[Level]):
-    total = sum(k for _, k in levels)
-    if total != len(shape):
-        raise ValueError(
-            f"norm design {levels} covers {total} axes but tensor has {len(shape)}"
-        )
-    for _, k in levels:
-        if k < 1:
-            raise ValueError("each level must aggregate at least one axis")
+    sched_mod.check_levels(shape, levels)
 
 
 def _final_level_size(shape, levels: Sequence[Level]) -> int:
     """Length of the vector the LAST level's θ-solver sees (autotune key)."""
-    _check_levels(shape, levels)
-    skip = sum(k for _, k in levels[:-1])
-    return math.prod(shape[skip:]) if shape[skip:] else 1
+    return sched_mod.compile_schedule(shape, levels).solve_size
 
 
 def multilevel_project(y: jax.Array, levels: Sequence[Level], radius,
                        method: str = "sort") -> jax.Array:
-    """MP^ν_radius(Y) — recursive implementation of Algorithm 6.
+    """MP^ν_radius(Y) — Algorithm 6 via the compiled schedule.
 
     ``method="auto"`` routes through the projection planner (``core.plan``):
-    on a concrete array the cached, autotuned plan executes directly; under a
-    trace (inside an enclosing jit/vmap) the shape-autotuned best *generic*
-    θ-solver is inlined instead (specialized fused backends can't be embedded
-    in someone else's trace).
+    on a concrete array the cached, autotuned plan executes directly (a
+    committed mesh-sharded array routes to the sharded schedule executor);
+    under a trace (inside an enclosing jit/vmap) the shape-autotuned best
+    *generic* θ-solver is inlined instead (specialized fused backends can't
+    be embedded in someone else's trace).
     """
     if method == "auto":
         from . import plan as _plan
@@ -65,17 +62,8 @@ def multilevel_project(y: jax.Array, levels: Sequence[Level], radius,
         if out is not None:
             return out
         method = _plan.best_l1_method(_final_level_size(y.shape, levels), y.dtype)
-    _check_levels(y.shape, levels)
-    method = ball.resolve_method(method)
-    (q, k), rest = levels[0], levels[1:]
-    if not rest:
-        # |ν| = 1: classical projection of the flattened tensor (Prop 6.3)
-        flat = y.reshape(-1)
-        return ball.project_ball(flat, q, radius, method=method).reshape(y.shape)
-    inner_axes = tuple(range(k))
-    v = ball.norm_reduce(y, q, axes=inner_axes)      # drop leading k axes
-    u = multilevel_project(v, rest, radius, method)  # recurse on the aggregate
-    return ball.project_grouped(y, q, u, inner_axes=inner_axes, method=method)
+    sched = sched_mod.compile_schedule(y.shape, levels)
+    return sched_mod.execute(y, sched, radius, method=method)
 
 
 def trilevel_l1infinf(y: jax.Array, radius, method: str = "sort") -> jax.Array:
@@ -107,7 +95,9 @@ def multilevel_norm(x: jax.Array, levels: Sequence[Level]) -> jax.Array:
 
 
 def work_depth(shape, levels: Sequence[Level]):
-    """(work, depth) model of Prop 6.4 — used by benchmarks/fig4_parallel.py.
+    """(work, depth) model of Prop 6.4 — the modelled sweep behind
+    ``benchmarks/projections.py::fig4_parallel`` (section ``fig4`` of
+    ``benchmarks.run``).
 
     work  = sequential element touches; depth = longest dependency chain with
     unbounded parallelism (tree reductions = log2 of the reduced extent).

@@ -39,13 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ball, multilevel
+from . import ball, multilevel, schedule
 
 AUTO = "auto"
 
@@ -53,6 +53,23 @@ _AUTOTUNE_BATCH = 4     # representative batch size for radius_kind="batch"
 _AUTOTUNE_REPS = 7      # interleaved timing rounds (min per candidate kept)
 
 _RADIUS_KINDS = ("scalar", "batch")
+
+
+class ShardingKey(NamedTuple):
+    """Canonical, hashable description of a mesh sharding (PlanKey component).
+
+    ``mesh_axes`` is ``((axis_name, size), ...)`` in mesh order; ``devices``
+    the flat device-id assignment (two meshes with equal axis signatures but
+    different device sets/orders must not alias one plan); ``spec`` maps each
+    tensor axis to a mesh axis name (or None). The live Mesh object is kept
+    in a side registry keyed on ``(mesh_axes, devices)`` — registered
+    whenever a plan is built from a real mesh, looked up when the sharded
+    backend builds.
+    """
+
+    mesh_axes: Tuple[Tuple[str, int], ...]
+    devices: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]
 
 
 class PlanKey(NamedTuple):
@@ -64,6 +81,7 @@ class PlanKey(NamedTuple):
     radius_kind: str                      # 'scalar' | 'batch'
     device: str                           # jax platform ('cpu' | 'tpu' | ...)
     interpret: bool = False               # Pallas interpret mode (tests)
+    sharding: Optional[ShardingKey] = None  # None = single-device workload
 
 
 class PlanBackend(NamedTuple):
@@ -88,6 +106,7 @@ _SPECIALIZED: Dict[str, PlanBackend] = {}
 _EXECS: Dict[Tuple[PlanKey, str], _Executable] = {}
 _PLANS: Dict[Tuple[PlanKey, str], "ProjectionPlan"] = {}
 _AUTO_WINNERS: Dict[PlanKey, Tuple[str, Dict[str, float]]] = {}
+_MESHES: Dict[Tuple[Tuple[str, int], ...], object] = {}  # ShardingKey.mesh_axes -> Mesh
 _KERNEL_BACKENDS_LOADED = False
 
 
@@ -109,12 +128,70 @@ def cache_info() -> Dict[str, int]:
             "auto_winners": len(_AUTO_WINNERS)}
 
 
-def canonical_levels(levels: Sequence) -> Tuple[Tuple[str, int], ...]:
-    """Canonicalize a norm design to ``(('1'|'2'|'inf', n_axes), ...)``."""
-    out = []
-    for q, k in levels:
-        out.append((ball.canonical_norm(q), int(k)))
-    return tuple(out)
+# the single home of norm-design canonicalization is the schedule IR;
+# re-exported here because every planner consumer keys on it
+canonical_levels = schedule.canonical_levels
+
+
+def canonical_sharding(sharding, ndim: int) -> Optional[ShardingKey]:
+    """Fold a sharding description into a hashable :class:`ShardingKey`.
+
+    Accepts ``None``, an already-canonical ``ShardingKey``, a committed
+    ``jax.sharding.NamedSharding``, or a ``(mesh, partition_spec)`` pair.
+    Returns ``None`` for shardings the mesh executor does not handle (fully
+    replicated, single-device, or >1 mesh axis on one tensor axis) — those
+    route to the ordinary single-device backends. Registers the live mesh in
+    the side registry so the sharded backend can rebuild from the key alone.
+    """
+    if sharding is None or isinstance(sharding, ShardingKey):
+        return sharding
+    if isinstance(sharding, jax.sharding.NamedSharding):
+        mesh, spec = sharding.mesh, sharding.spec
+    else:
+        mesh, spec = sharding
+    if np.prod(list(mesh.shape.values())) <= 1:
+        return None
+    from . import sharded as shmod
+
+    names = shmod.parse_spec(spec, ndim, mesh)  # the one spec parser
+    if names is None:
+        return None  # >1 mesh axis on a tensor axis: executor can't run it
+    if not any(names):
+        return None  # fully replicated: a plain single-device workload
+    mesh_axes = tuple((str(n), int(s)) for n, s in mesh.shape.items())
+    devices = tuple(int(d.id) for d in mesh.devices.flat)
+    _MESHES[mesh_axes, devices] = mesh
+    return ShardingKey(mesh_axes, devices, tuple(names))
+
+
+def _sharded_available(key: PlanKey) -> bool:
+    # scalar-radius only: a batch plan vmaps its executable, and shard_map
+    # bodies don't batch — sharded serving groups run per-request instead
+    return (key.sharding is not None and key.radius_kind == "scalar"
+            and (key.sharding.mesh_axes, key.sharding.devices) in _MESHES)
+
+
+def _build_sharded(key: PlanKey):
+    from . import sharded as shmod
+
+    mesh = _MESHES[key.sharding.mesh_axes, key.sharding.devices]
+    spec = key.sharding.spec
+    levels = list(key.levels)
+
+    def fn(y, radius):
+        return shmod.multilevel_project_sharded(
+            y, levels, radius, mesh=mesh, spec=spec, method="auto")
+
+    return fn
+
+
+register_plan_backend(PlanBackend(
+    name="sharded",
+    available=_sharded_available,
+    build=_build_sharded,
+    description="schedule executor under shard_map: collective reduces, "
+                "gathered tiny outer solve, local applies (DESIGN.md §3)",
+))
 
 
 def _maybe_register_kernel_backends() -> None:
@@ -168,7 +245,11 @@ def _get_executable(key: PlanKey, name: str) -> _Executable:
 
 
 def _candidates(key: PlanKey) -> List[str]:
-    """Backends worth benchmarking for this key."""
+    """Backends worth benchmarking for this key.
+
+    For a sharded key the generic θ-solvers still compete: jitted on the
+    committed sharded input they become the GSPMD gather-and-project
+    baseline, so autotune decides schedule-vs-gather by measurement."""
     if any(q == "1" for q, _ in key.levels):
         names = list(ball.available_methods())
     else:
@@ -184,6 +265,13 @@ def _bench_args(key: PlanKey):
     shape = key.shape if key.radius_kind == "scalar" \
         else (_AUTOTUNE_BATCH,) + key.shape
     y = jnp.asarray(rng.uniform(0.0, 1.0, shape), key.dtype)
+    if key.sharding is not None:
+        mesh = _MESHES[key.sharding.mesh_axes, key.sharding.devices]
+        spec = key.sharding.spec
+        if key.radius_kind == "batch":
+            spec = (None,) + spec
+        y = jax.device_put(y, jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*spec)))
     if key.radius_kind == "scalar":
         radius = jnp.asarray(1.0, key.dtype)
     else:
@@ -274,7 +362,7 @@ class ProjectionPlan:
 
 def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
               method: str = AUTO, *, interpret: bool = False,
-              device: str | None = None) -> ProjectionPlan:
+              device: str | None = None, sharding=None) -> ProjectionPlan:
     """Build (or fetch from cache) the projection plan for one workload.
 
     ``shape``/``dtype`` describe one tensor to project (for
@@ -286,6 +374,12 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
     micro-benchmark every available backend on first call and cache the
     winner. ``interpret=True`` makes the fused Pallas backends eligible off
     TPU (interpret mode — tests only; never use it for performance).
+
+    ``sharding`` (a committed ``NamedSharding`` or a ``(mesh, spec)`` pair)
+    makes the plan mesh-aware: the schedule executor joins the candidate set
+    as the ``"sharded"`` backend and the generic candidates are timed on the
+    committed sharded input (i.e. as GSPMD gather-and-project), so the
+    autotune verdict is schedule-vs-gather by measurement.
     """
     _maybe_register_kernel_backends()
     shape = tuple(int(s) for s in shape)
@@ -297,7 +391,8 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
             f"radius_kind must be one of {_RADIUS_KINDS}, got {radius_kind!r}")
     if device is None:
         device = jax.devices()[0].platform
-    key = PlanKey(shape, dtype.name, lv, radius_kind, device, bool(interpret))
+    key = PlanKey(shape, dtype.name, lv, radius_kind, device, bool(interpret),
+                  canonical_sharding(sharding, len(shape)))
     cache_key = (key, method)
     if cache_key in _PLANS:
         return _PLANS[cache_key]
@@ -318,7 +413,7 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
 
 def validate_backend(shape, dtype, levels, method: str, *,
                      device: str | None = None,
-                     interpret: bool = False) -> str:
+                     interpret: bool = False, sharding=None) -> str:
     """Canonicalize + validate a backend name for a workload, without
     building (or autotuning) a plan.
 
@@ -333,7 +428,8 @@ def validate_backend(shape, dtype, levels, method: str, *,
     if device is None:
         device = jax.devices()[0].platform
     key = PlanKey(tuple(int(s) for s in shape), np.dtype(dtype).name,
-                  canonical_levels(levels), "scalar", device, bool(interpret))
+                  canonical_levels(levels), "scalar", device, bool(interpret),
+                  canonical_sharding(sharding, len(shape)))
     return _canonical_backend_name(key, method)
 
 
@@ -354,9 +450,15 @@ def maybe_plan_call(y, levels, radius):
 
     Returns the projected array when ``y`` is concrete (plan built/cached and
     executed), or ``None`` when ``y`` is a tracer — the caller then falls back
-    to :func:`best_l1_method` on the (always static) shape.
+    to :func:`best_l1_method` on the (always static) shape. A committed
+    mesh-sharded array routes to a mesh-aware plan (the sharded schedule
+    executor competes against GSPMD gather-and-project in its autotune).
     """
     if isinstance(y, jax.core.Tracer):
         return None
-    plan = make_plan(jnp.shape(y), jnp.asarray(y).dtype, levels, method=AUTO)
+    sharding = getattr(y, "sharding", None)
+    if not isinstance(sharding, jax.sharding.NamedSharding):
+        sharding = None
+    plan = make_plan(jnp.shape(y), jnp.asarray(y).dtype, levels, method=AUTO,
+                     sharding=sharding)
     return plan(y, radius)

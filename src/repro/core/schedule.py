@@ -1,0 +1,269 @@
+"""Schedule IR for multi-level projections — compile ν, then execute anywhere.
+
+``multilevel_project`` used to be a recursion (Algorithm 6 verbatim). Every
+consumer that is *not* a single-device eager call — the planner's fused
+backends, the mesh executor in ``core/sharded.py``, the collective-bytes
+model — needs the same information the recursion only exposes implicitly:
+which reduce feeds which apply, what the aggregate shapes are, and where the
+single tiny θ-solve sits. This module makes that structure explicit.
+
+A norm design ``levels = [(q₁, k₁), ..., (q_L, k_L)]`` compiles to the flat
+step list
+
+    ReduceLevel(q₁, axes₁) → … → ReduceLevel(q_{L-1}, axes_{L-1})
+        → OuterSolve(q_L)
+    → ApplyGroup(q_{L-1}, axes_{L-1}) → … → ApplyGroup(q₁, axes₁)
+
+i.e. a forward sweep of norm aggregations, ONE vector projection on the fully
+aggregated (tiny) tensor, and a backward sweep of group-wise applies that
+re-uses the forward aggregates (the ℓ2 apply is a rescale by the *saved*
+group norm; the ℓ∞ apply is a clip; only a ℓ1 apply needs per-group θ-solves).
+Executors differ only in where each step runs:
+
+* :func:`execute` — single device / inside jit (what ``multilevel_project``
+  now calls instead of recursing);
+* ``core.sharded.multilevel_project_sharded`` — the same schedule under
+  ``shard_map``: reduces combine across the mesh with one collective per
+  sharded level, the OuterSolve gathers only the final aggregate, applies
+  stay local (DESIGN.md §3);
+* the fused Pallas planner backends, which pattern-match whole schedules.
+
+``batch_dims`` prepends carried-through axes: the leading ``batch_dims`` axes
+are outer axes of every level and the OuterSolve runs batched over them (the
+execution mode of the training hook, where a stacked (layers, …) weight
+projects each trailing block independently).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import ball
+
+Level = Tuple[object, int]
+
+
+class ReduceLevel(NamedTuple):
+    """Aggregate ``axes`` of the current tensor with ``norm`` (forward sweep)."""
+
+    norm: str                 # canonical '1' | '2' | 'inf'
+    axes: Tuple[int, ...]     # absolute axes in this step's input tensor
+
+
+class OuterSolve(NamedTuple):
+    """Project the fully-aggregated tensor (flattened past the batch axes)
+    onto the ``norm``-ball — the single tiny θ-solve of the whole design."""
+
+    norm: str
+
+
+class ApplyGroup(NamedTuple):
+    """Shrink each group (a slice over ``axes``) of the matching reduce's
+    input to the radius computed one level up (backward sweep)."""
+
+    norm: str
+    axes: Tuple[int, ...]
+
+
+Step = Union[ReduceLevel, OuterSolve, ApplyGroup]
+
+
+class Schedule(NamedTuple):
+    """A compiled norm design: the step list plus its static shape plan.
+
+    ``stage_shapes[i]`` is the input shape of the i-th reduce (so
+    ``stage_shapes[0]`` is the tensor shape and ``stage_shapes[-1]`` the shape
+    the OuterSolve sees, batch axes included).
+    """
+
+    shape: Tuple[int, ...]
+    batch_dims: int
+    levels: Tuple[Tuple[str, int], ...]
+    steps: Tuple[Step, ...]
+    stage_shapes: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def reduces(self) -> Tuple[ReduceLevel, ...]:
+        return tuple(s for s in self.steps if isinstance(s, ReduceLevel))
+
+    @property
+    def applies(self) -> Tuple[ApplyGroup, ...]:
+        return tuple(s for s in self.steps if isinstance(s, ApplyGroup))
+
+    @property
+    def solve(self) -> OuterSolve:
+        return next(s for s in self.steps if isinstance(s, OuterSolve))
+
+    @property
+    def solve_size(self) -> int:
+        """Length of the vector the OuterSolve's θ-solver sees (per batch
+        element) — the planner's autotune key for the generic backends."""
+        lead = self.stage_shapes[-1][self.batch_dims:]
+        return math.prod(lead) if lead else 1
+
+
+def canonical_levels(levels: Sequence[Level]) -> Tuple[Tuple[str, int], ...]:
+    """Canonicalize a norm design to ``(('1'|'2'|'inf', n_axes), ...)``."""
+    return tuple((ball.canonical_norm(q), int(k)) for q, k in levels)
+
+
+def check_levels(shape, levels: Sequence[Level], batch_dims: int = 0) -> None:
+    """Validate that ν covers exactly the non-batch axes of ``shape``."""
+    total = sum(k for _, k in levels)
+    if total != len(shape) - batch_dims:
+        covered = f"{len(shape)} - {batch_dims} batch" if batch_dims \
+            else str(len(shape))
+        raise ValueError(
+            f"norm design {list(levels)} covers {total} axes but tensor has "
+            f"{covered}")
+    for _, k in levels:
+        if k < 1:
+            raise ValueError("each level must aggregate at least one axis")
+
+
+@functools.lru_cache(maxsize=None)
+def _compile_cached(shape, levels, batch_dims):
+    check_levels(shape, levels, batch_dims)
+    b = batch_dims
+    steps = []
+    stage_shapes = [shape]
+    cur = shape
+    for q, k in levels[:-1]:
+        axes = tuple(range(b, b + k))
+        steps.append(ReduceLevel(q, axes))
+        cur = cur[:b] + cur[b + k:]
+        stage_shapes.append(cur)
+    steps.append(OuterSolve(levels[-1][0]))
+    for (q, k), red in zip(reversed(levels[:-1]), reversed(steps[:-1])):
+        steps.append(ApplyGroup(q, red.axes))
+    return Schedule(shape, b, levels, tuple(steps), tuple(stage_shapes))
+
+
+def compile_schedule(shape, levels: Sequence[Level],
+                     batch_dims: int = 0) -> Schedule:
+    """Lower a norm design against a shape into a reduce/solve/apply schedule."""
+    return _compile_cached(tuple(int(s) for s in shape),
+                           canonical_levels(levels), int(batch_dims))
+
+
+# --------------------------------------------------------------------------- #
+# Step primitives shared by the local and the sharded executor
+# --------------------------------------------------------------------------- #
+
+
+def apply_group(y: jax.Array, norm: str, radii: jax.Array, axes,
+                agg: Optional[jax.Array], method: str) -> jax.Array:
+    """One ApplyGroup step: shrink each group of ``y`` to its radius.
+
+    ``agg`` is the matching forward aggregate (the group norms). The ℓ2 apply
+    rescales by it instead of recomputing the norm — on a mesh the saved
+    aggregate is already the *global* group norm, so the apply needs no
+    further communication; locally it just saves a reduction.
+    """
+    if norm == "inf":
+        u_b = jnp.expand_dims(radii, axes)
+        return jnp.clip(y, -u_b, u_b)
+    if norm == "2" and agg is not None:
+        scale = jnp.where(agg > radii, radii / jnp.maximum(agg, 1e-30), 1.0)
+        return y * jnp.expand_dims(scale, axes)
+    return ball.project_grouped(y, norm, radii, inner_axes=axes, method=method)
+
+
+def solve_outer(top: jax.Array, norm: str, radius, batch_dims: int,
+                method: str) -> jax.Array:
+    """The OuterSolve: flatten past the batch axes, project, restore shape."""
+    lead = top.shape[:batch_dims]
+    flat = top.reshape(lead + (-1,))
+    return ball.project_ball(flat, norm, radius, method=method).reshape(top.shape)
+
+
+def execute(y: jax.Array, sched: Schedule, radius,
+            method: str = "sort") -> jax.Array:
+    """Run a compiled schedule on one device (or inside an enclosing jit).
+
+    Forward sweep saves every reduce input and output; the OuterSolve runs on
+    the final aggregate; the backward sweep re-applies through the saved
+    stages. Identical math to the old recursion — the property tests assert
+    the feasibility invariant either way.
+    """
+    method = ball.resolve_method(method)
+    inputs = [y]
+    aggs = []
+    for red in sched.reduces:
+        v = ball.norm_reduce(inputs[-1], red.norm, axes=red.axes)
+        aggs.append(v)
+        inputs.append(v)
+    w = solve_outer(inputs[-1], sched.solve.norm, radius, sched.batch_dims,
+                    method)
+    for i, app in zip(reversed(range(len(aggs))), sched.applies):
+        w = apply_group(inputs[i], app.norm, w, app.axes, aggs[i], method)
+    return w
+
+
+# --------------------------------------------------------------------------- #
+# Collective-bytes model (DESIGN.md §3, generalized to arbitrary ν)
+# --------------------------------------------------------------------------- #
+
+_L1_APPLY_SWEEPS = 65  # distributed bisect: 64 φ-psums + the initial pmax
+
+
+def sharded_collective_bytes(shape, levels: Sequence[Level], spec,
+                             mesh_sizes, itemsize: int = 4) -> dict:
+    """Per-step collective payload of the sharded schedule vs gather-and-project.
+
+    ``spec`` maps each tensor axis to a mesh axis name (or None); ``mesh_sizes``
+    maps mesh axis names to their device counts. Payload bytes count what a
+    collective moves per device pair-step (matching ``fig4_coll_bytes_*``):
+
+    * a ReduceLevel over a sharded axis all-reduces its *output* aggregate;
+    * the OuterSolve all-gathers the final aggregate iff a sharded axis
+      survives every reduce (otherwise it is already replicated);
+    * an ℓ∞/ℓ2 ApplyGroup is local (clip / saved-aggregate rescale);
+      an ℓ1 ApplyGroup whose group spans a sharded axis runs the distributed
+      bisect — ``_L1_APPLY_SWEEPS`` small collectives over the group count.
+
+    Gather-and-project moves the whole tensor. The per-level ratio is the
+    aggregated extent — Proposition 6.4's speedup as bytes.
+    """
+    sched = compile_schedule(shape, levels)
+    names = [spec[a] if a < len(spec) else None for a in range(len(shape))]
+    steps = []
+    cur_names = list(names)
+    for red in sched.reduces:
+        out_shape = [d for a, d in enumerate(sched.stage_shapes[len(steps)])
+                     if a not in red.axes]
+        coll = [cur_names[a] for a in red.axes if cur_names[a]]
+        payload = math.prod(out_shape) * itemsize if coll else 0
+        steps.append({"step": f"reduce_{red.norm}", "bytes": payload})
+        cur_names = [n for a, n in enumerate(cur_names) if a not in red.axes]
+    solve_payload = 0
+    if any(cur_names):
+        solve_payload = math.prod(sched.stage_shapes[-1]) * itemsize
+    steps.append({"step": f"solve_{sched.solve.norm}", "bytes": solve_payload})
+    apply_names = list(names)
+    stage_name_list = [list(names)]
+    for red in sched.reduces:
+        apply_names = [n for a, n in enumerate(apply_names)
+                       if a not in red.axes]
+        stage_name_list.append(list(apply_names))
+    for i, app in zip(reversed(range(len(sched.reduces))), sched.applies):
+        coll = [stage_name_list[i][a] for a in app.axes if stage_name_list[i][a]]
+        if app.norm == "1" and coll:
+            groups = math.prod(sched.stage_shapes[i + 1])
+            payload = groups * itemsize * _L1_APPLY_SWEEPS
+        else:
+            payload = 0
+        steps.append({"step": f"apply_{app.norm}", "bytes": payload})
+    total = sum(s["bytes"] for s in steps)
+    gathered = math.prod(shape) * itemsize
+    return {
+        "per_step": steps,
+        "schedule_bytes": total,
+        "gather_bytes": gathered,
+        "ratio": gathered / max(total, 1),
+    }

@@ -1,91 +1,316 @@
-"""Mesh-parallel bi-level projection — Proposition 6.4 on a TPU mesh.
+"""Mesh-native schedule executor — Proposition 6.4 on a device mesh, for ANY ν.
 
-The bi-level split makes the distributed projection almost communication-free:
-with a weight matrix sharded column-wise over mesh axis ``axis_name``,
+The compiled schedule of ``core.schedule`` maps onto a mesh step by step
+(DESIGN.md §3 derives the collective-bytes bound):
 
-    local:   v_loc  = ‖·‖_q of the LOCAL columns             (no comm)
-    gather:  v      = all_gather(v_loc)                      (m × 4 bytes — tiny)
-    local:   u      = P^p_η(v)  (replicated tiny solve)      (no comm)
-    local:   X_loc  = P^q_{u_j}(Y_loc)                       (no comm)
+    ReduceLevel  — local norm-reduce; ONE collective combine (psum / pmax)
+                   only when the level aggregates a sharded axis, and the
+                   payload is the already-reduced aggregate, not the tensor
+    OuterSolve   — all-gather of the FINAL aggregate (tiny, and only if a
+                   sharded axis survives every reduce), replicated θ-solve,
+                   local re-slice of the per-group radii
+    ApplyGroup   — local: ℓ∞ is a clip, ℓ2 rescales by the saved (already
+                   global) group norm; an ℓ1 apply whose group spans the mesh
+                   runs a distributed bisection on θ (64 tiny φ-psums)
 
-versus the exact projection which needs the full matrix on one device
-(nm × 4 bytes of collective traffic). The all-gather'd payload is a factor n
-smaller — this is the paper's "exponential parallel speedup" realized as a
-collective-bytes reduction; DESIGN.md §3 ("The sharded bi-level split: a
-collective-bytes argument") derives the bound.
-
-These functions are written for use inside ``jax.shard_map``; the
-``*_spmd`` wrappers build the shard_map for a given mesh. When the columns of
-the target tensor are *not* sharded (or the mesh axis doesn't divide them),
-the plain ``core.bilevel`` functions are used — GSPMD then keeps everything
-local because all ops are elementwise/reduce along unsharded axes.
+``multilevel_project_sharded`` is the full-array entry point: it pads uneven
+shards with zeros (exact for every supported norm — zero entries are fixed
+points of all three projections), runs the schedule under ``shard_map``, and
+slices the result back. ``bilevel_project_sharded`` /
+``trilevel_project_sharded`` — the two hand-written specials this module used
+to consist of — survive as thin wrappers that build the equivalent schedule
+body for use inside an existing ``shard_map``.
 """
 
 from __future__ import annotations
 
-import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import ball
-from .bilevel import _inner_project_cols
+from . import schedule as sched_mod
+
+try:  # jax >= 0.5 exports it at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent import
+    from jax.experimental.shard_map import shard_map
+
+_BISECT_ITERS = 64
+
+
+def parse_spec(spec, ndim: int, mesh) -> Optional[Tuple[Optional[str], ...]]:
+    """THE parser of PartitionSpec entries for the schedule executor (the
+    planner's ``canonical_sharding`` and the projection hook delegate here).
+
+    Returns the per-tensor-axis mesh axis name padded to ``ndim``, or ``None``
+    when an entry shards one tensor axis over several mesh axes — supported
+    by GSPMD but not by this executor, so callers fall back. A name that is
+    not a mesh axis at all is a caller bug and raises immediately.
+    """
+    entries = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    names = []
+    for entry in entries[:ndim]:
+        if entry is None:
+            names.append(None)
+            continue
+        if isinstance(entry, (tuple, list)):
+            if len(entry) != 1:
+                return None  # one mesh axis per tensor axis only
+            entry = entry[0]
+        if entry not in mesh.shape:
+            raise ValueError(
+                f"spec names mesh axis {entry!r} but mesh has "
+                f"{tuple(mesh.shape)}")
+        names.append(str(entry))
+    return tuple(names)
+
+
+def _spec_axis_names(spec, ndim: int, mesh) -> Tuple[Optional[str], ...]:
+    """Strict :func:`parse_spec`: multi-mesh-axis entries are an error here
+    (the executor cannot run them and has nothing to fall back to)."""
+    names = parse_spec(spec, ndim, mesh)
+    if names is None:
+        raise ValueError(
+            f"spec {tuple(spec)!r} shards a tensor axis over multiple mesh "
+            "axes: the schedule executor supports one mesh axis per tensor "
+            "axis")
+    return names
+
+
+def _grouped_l1_collective(y: jax.Array, radii: jax.Array, axes,
+                           axis_names: Tuple[str, ...],
+                           group_sum: jax.Array) -> jax.Array:
+    """Distributed grouped-ℓ1 apply: each group spans mesh axes ``axis_names``.
+
+    Bisection on the soft-threshold θ (DESIGN.md §4's VPU-shaped solver) where
+    every φ(θ) evaluation is a local partial sum plus one tiny psum over the
+    group count — the group's data never moves. ``group_sum`` is the saved
+    global ℓ1 aggregate, giving the inside-the-ball test for free.
+    """
+    a = jnp.abs(y)
+    hi = jax.lax.pmax(jnp.max(a, axis=axes), axis_names)
+    # == 0 (hi >= 0), but derived from hi so shard_map's replication checker
+    # sees the same rep type for both loop carries
+    lo = jnp.minimum(hi, 0.0)
+
+    def body(_, loh):
+        lo, hi = loh
+        mid = 0.5 * (lo + hi)
+        phi = jnp.sum(jnp.maximum(a - jnp.expand_dims(mid, axes), 0.0),
+                      axis=axes)
+        phi = jax.lax.psum(phi, axis_names)
+        too_small = phi > radii
+        return jnp.where(too_small, mid, lo), jnp.where(too_small, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
+    theta = jnp.where(group_sum <= radii, 0.0,
+                      jnp.maximum(0.5 * (lo + hi), 0.0))
+    return jnp.sign(y) * jnp.maximum(a - jnp.expand_dims(theta, axes), 0.0)
+
+
+def make_schedule_body(sched: sched_mod.Schedule,
+                       axis_names: Sequence[Optional[str]],
+                       method: str = "sort"):
+    """Build the shard_map body ``(y_local, radius) -> x_local`` for a schedule.
+
+    ``axis_names[a]`` is the mesh axis the a-th tensor axis is sharded over
+    (None = unsharded/local). The body is pure collective-and-local code —
+    method resolution happens here, at build time, never inside the trace.
+    """
+    method = ball.resolve_method(method)
+    b = sched.batch_dims
+
+    def body(y_loc, radius):
+        inputs = [y_loc]
+        aggs = []
+        stage_names = [tuple(axis_names)]
+        for red in sched.reduces:
+            cur, names = inputs[-1], stage_names[-1]
+            coll = tuple(names[a] for a in red.axes if names[a])
+            if red.norm == "1":
+                v = jnp.sum(jnp.abs(cur), axis=red.axes)
+                v = jax.lax.psum(v, coll) if coll else v
+            elif red.norm == "2":
+                s = jnp.sum(jnp.square(cur), axis=red.axes)
+                v = jnp.sqrt(jax.lax.psum(s, coll) if coll else s)
+            else:
+                v = jnp.max(jnp.abs(cur), axis=red.axes)
+                v = jax.lax.pmax(v, coll) if coll else v
+            aggs.append(v)
+            inputs.append(v)
+            stage_names.append(tuple(
+                n for a, n in enumerate(names) if a not in red.axes))
+
+        # ---- OuterSolve: gather the surviving sharded axes (tiny), solve
+        # replicated, slice the local radii back out ---------------------- #
+        top, names = inputs[-1], stage_names[-1]
+        local_sizes = top.shape
+        g = top
+        for ax in range(b, len(names)):
+            if names[ax]:
+                g = jax.lax.all_gather(g, names[ax], axis=ax, tiled=True)
+        w = sched_mod.solve_outer(g, sched.solve.norm, radius, b, method)
+        for ax in range(b, len(names)):
+            if names[ax]:
+                idx = jax.lax.axis_index(names[ax])
+                w = jax.lax.dynamic_slice_in_dim(
+                    w, idx * local_sizes[ax], local_sizes[ax], axis=ax)
+
+        # ---- backward sweep: applies stay local (clip / saved-norm rescale);
+        # only a mesh-spanning l1 group needs the distributed θ-solve ------ #
+        for i, app in zip(reversed(range(len(aggs))), sched.applies):
+            names = stage_names[i]
+            coll = tuple(names[a] for a in app.axes if names[a])
+            if app.norm == "1" and coll:
+                w = _grouped_l1_collective(inputs[i], w, app.axes, coll,
+                                           aggs[i])
+            else:
+                w = sched_mod.apply_group(inputs[i], app.norm, w, app.axes,
+                                          aggs[i], method)
+        return w
+
+    return body
+
+
+def _resolve_sharded_method(method: str, sched: sched_mod.Schedule,
+                            dtype) -> str:
+    """``method="auto"`` for the mesh executor: autotune the replicated outer
+    θ-solve on the gathered final-aggregate length (generic backends only —
+    resolved at build time, outside shard_map; memoised by the planner)."""
+    if method != "auto":
+        return ball.resolve_method(method)
+    from . import plan as _plan
+
+    return _plan.best_l1_method(sched.solve_size, dtype)
+
+
+def multilevel_project_sharded(y: jax.Array, levels, radius, *, mesh, spec,
+                               method: str = "sort",
+                               batch_dims: int = 0) -> jax.Array:
+    """MP^ν on a mesh: execute the compiled schedule under ``shard_map``.
+
+    ``spec`` is the PartitionSpec of ``y`` over ``mesh`` (any sharded-axis
+    position — aggregated, group, or batch axes may all be sharded; at most
+    one mesh axis per tensor axis). The leading ``batch_dims`` axes are
+    carried through as independent projections (the training hook's stacked
+    layers/experts). Mesh axes that do not divide their tensor axis are
+    handled by zero-padding (exact: zeros are fixed points of every level).
+
+    ``method`` picks the θ-solver for the replicated outer solve and any
+    local ℓ1 applies (``"auto"`` autotunes on the gathered aggregate length);
+    a mesh-spanning ℓ1 group always uses the distributed bisection.
+    """
+    y = jnp.asarray(y)
+    sched = sched_mod.compile_schedule(y.shape, levels, batch_dims)
+    if not isinstance(spec, P):
+        spec = P(*spec)
+    names = _spec_axis_names(spec, y.ndim, mesh)
+    meth = _resolve_sharded_method(method, sched, y.dtype)
+
+    pad = [(0, (-d) % mesh.shape[n] if n else 0) for d, n in zip(y.shape, names)]
+    padded = jnp.pad(y, pad) if any(p for _, p in pad) else y
+    if padded.shape != y.shape:
+        sched = sched_mod.compile_schedule(padded.shape, levels, batch_dims)
+
+    body = make_schedule_body(sched, names, method=meth)
+    in_spec = P(*names)
+    # check_rep=False: the generic θ-solvers run while/fori loops (filter's
+    # active-set sweep, bisect's fixed iteration) that the replication checker
+    # has no rules for — it rejects them even though every carry is in fact
+    # uniformly replicated after the gather. Correctness is pinned by the
+    # sharded-vs-single-device equality tests across all registered methods.
+    out = shard_map(body, mesh=mesh, in_specs=(in_spec, P()),
+                    out_specs=in_spec,
+                    check_rep=False)(padded, jnp.asarray(radius, y.dtype))
+    if out.shape != y.shape:
+        out = out[tuple(slice(0, d) for d in y.shape)]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# The two historical specials — thin wrappers over the schedule body/executor
+# --------------------------------------------------------------------------- #
 
 
 def bilevel_project_sharded(y_local: jax.Array, radius, p=1, q=jnp.inf,
                             *, axis_name: str, method: str = "sort") -> jax.Array:
-    """Body to run under shard_map; ``y_local`` is the (n, m_local) shard."""
-    v_local = ball.norm_reduce(y_local, q, axes=0)              # (m_local,)
-    v = jax.lax.all_gather(v_local, axis_name, tiled=True)      # (m,) replicated
-    u = ball.project_ball(v, p, radius, method=method)          # tiny, replicated
-    idx = jax.lax.axis_index(axis_name)
-    m_local = y_local.shape[1]
-    u_local = jax.lax.dynamic_slice_in_dim(u, idx * m_local, m_local)
-    return _inner_project_cols(y_local, q, u_local, method)
-
-
-def make_sharded_bilevel(mesh, axis_name: str, p=1, q=jnp.inf, method: str = "sort"):
-    """shard_map'd bi-level projection: columns (axis 1) sharded over axis_name.
-
-    ``method="auto"`` autotunes the replicated outer θ-solve per gathered
-    aggregate length (the m of the first call) — resolved OUTSIDE shard_map,
-    once, so the per-call body stays collective-only.
-    """
-    if method != "auto":
-        method = ball.resolve_method(method)  # fail at build time, not in shard_map
-    resolved = {}
-
-    def fn(y, radius):
-        if method == "auto":
-            from . import plan as _plan
-            key = (y.shape[1], jnp.asarray(y).dtype.name)
-            if key not in resolved:  # autotune once per (length, dtype)
-                resolved[key] = _plan.best_l1_method(key[0], key[1])
-            meth = resolved[key]
-        else:
-            meth = method
-        body = functools.partial(
-            bilevel_project_sharded, p=p, q=q, axis_name=axis_name, method=meth
-        )
-        return jax.shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(P(None, axis_name), P()),
-            out_specs=P(None, axis_name),
-        )(y, jnp.asarray(radius, jnp.float32))
-    return fn
+    """Bi-level body to run under shard_map; ``y_local`` is the (n, m_local)
+    shard, columns sharded over ``axis_name``. Wrapper over the schedule body
+    for ν = [(q, 1), (p, 1)]; requires even shards (the full-array
+    ``multilevel_project_sharded`` pads uneven ones). The filter/bisect
+    θ-solvers need the enclosing shard_map built with ``check_rep=False``
+    (their while/fori loops have no replication rules — the executor does
+    this for you)."""
+    sched = sched_mod.compile_schedule(y_local.shape, [(q, 1), (p, 1)])
+    body = make_schedule_body(sched, (None, axis_name), method=method)
+    return body(y_local, radius)
 
 
 def trilevel_project_sharded(y_local: jax.Array, radius, *, axis_name: str,
                              method: str = "sort") -> jax.Array:
-    """Sharded tri-level ℓ1,∞,∞ for (c, n, m_local) tensors (experts/heads last)."""
-    v2 = jnp.max(jnp.abs(y_local), axis=0)                      # (n, m_local)
-    v1_local = jnp.max(v2, axis=0)                              # (m_local,)
-    v1 = jax.lax.all_gather(v1_local, axis_name, tiled=True)    # (m,)
-    u1 = ball.project_l1(v1, radius, method=method)
-    idx = jax.lax.axis_index(axis_name)
-    m_local = y_local.shape[-1]
-    u1_local = jax.lax.dynamic_slice_in_dim(u1, idx * m_local, m_local)
-    v2_c = jnp.minimum(v2, u1_local[None, :])                   # P^inf per column
-    return jnp.clip(y_local, -v2_c[None, :, :], v2_c[None, :, :])
+    """Sharded tri-level ℓ1,∞,∞ body for (c, n, m_local) tensors (experts or
+    heads last). Wrapper over the schedule body; even shards only."""
+    sched = sched_mod.compile_schedule(
+        y_local.shape, [(jnp.inf, 1), (jnp.inf, 1), (1, 1)])
+    body = make_schedule_body(sched, (None, None, axis_name), method=method)
+    return body(y_local, radius)
+
+
+def _check_divides(m: int, mesh, axis_name: str, what: str) -> None:
+    size = mesh.shape[axis_name]
+    if m % size:
+        raise ValueError(
+            f"{what}: sharded axis of extent {m} is not divisible by mesh "
+            f"axis {axis_name!r} of size {size} — the per-device slice of the "
+            "outer solve would silently be wrong. Use "
+            "multilevel_project_sharded, which zero-pads uneven shards.")
+
+
+def make_sharded_bilevel(mesh, axis_name: str, p=1, q=jnp.inf,
+                         method: str = "sort"):
+    """shard_map'd bi-level projection: columns (axis 1) sharded over
+    ``axis_name``. Delegates to the schedule executor, so ``method="auto"``
+    autotunes the replicated outer θ-solve exactly like every other design.
+    Validates shard evenness with a clear error at call time."""
+    if method != "auto":
+        method = ball.resolve_method(method)  # fail at build time
+
+    def fn(y, radius):
+        _check_divides(y.shape[1], mesh, axis_name, "make_sharded_bilevel")
+        return multilevel_project_sharded(
+            y, [(q, 1), (p, 1)], radius, mesh=mesh, spec=P(None, axis_name),
+            method=method)
+
+    return fn
+
+
+def make_sharded_trilevel(mesh, axis_name: str, method: str = "sort"):
+    """shard_map'd tri-level ℓ1,∞,∞: last axis sharded over ``axis_name``.
+    The ``method="auto"`` path resolves through the planner like the bi-level
+    builder (the historical asymmetry is gone — both are schedule wrappers)."""
+    if method != "auto":
+        method = ball.resolve_method(method)
+
+    def fn(y, radius):
+        _check_divides(y.shape[-1], mesh, axis_name, "make_sharded_trilevel")
+        return multilevel_project_sharded(
+            y, [(jnp.inf, 1), (jnp.inf, 1), (1, 1)], radius, mesh=mesh,
+            spec=P(None, None, axis_name), method=method)
+
+    return fn
+
+
+def sharded_collective_bytes(shape, levels, spec, mesh,
+                             itemsize: int = 4) -> dict:
+    """Collective payload of this design on this mesh vs gather-and-project
+    (the generalized DESIGN.md §3 argument; used by ``benchmarks.run --only
+    sharded``)."""
+    if not isinstance(spec, P):
+        spec = P(*spec)
+    names = _spec_axis_names(spec, len(shape), mesh)
+    return sched_mod.sharded_collective_bytes(
+        tuple(shape), levels, names,
+        {n: mesh.shape[n] for n in mesh.axis_names}, itemsize)

@@ -30,7 +30,9 @@ _TRILEVEL_LEVELS = (("inf", 1), ("inf", 1), ("1", 1))
 
 
 def _on_tpu_or_interpret(key: planmod.PlanKey) -> bool:
-    return key.device == "tpu" or key.interpret
+    # single-device workloads only: a mesh-sharded key routes to the sharded
+    # schedule executor, not to a fused single-chip kernel
+    return (key.device == "tpu" or key.interpret) and key.sharding is None
 
 
 def _bilevel_available(key: planmod.PlanKey) -> bool:

@@ -44,6 +44,12 @@ VARIANTS = {
                                  dict(attn_probs_bf16=True, attn_chunk=2048)),
     "stablelm_mb64": ("stablelm-1.6b", "train_4k",
                       dict(attn_probs_bf16=True, microbatch=64)),
+    # mesh-native projection hook on every MLP weight: the schedule executor
+    # projects FSDP/TP-sharded leaves in place (collective bytes = aggregates
+    # only, DESIGN.md §3) — the roofline delta vs stablelm_* baselines is the
+    # measured cost of widening the paper's constraint to the whole MLP
+    "stablelm_proj_all": ("stablelm-1.6b", "train_4k",
+                          dict(projection_pattern=r"(w_up|w_gate|w_down)")),
     "kimi_scatter_mb32": ("kimi-k2-1t-a32b", "train_4k",
                           dict(moe_dispatch="scatter", microbatch=32)),
     "kimi_scatter_mb64": ("kimi-k2-1t-a32b", "train_4k",

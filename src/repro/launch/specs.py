@@ -146,15 +146,19 @@ def train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, tune=None):
     act_spec = P(b_ax, None, None)
     v_ok = cfg.vocab % SH.mesh_shape_dict(mesh)["model"] == 0
     logits_spec = P(b_ax, None, "model" if v_ok else None)
-    step_fn = TS.make_train_step(cfg, tcfg, api, impl=tune.attn_impl,
-                                 n_groups=n_groups, act_spec=act_spec,
-                                 logits_spec=logits_spec)
     state = abstract_train_state(cfg, tcfg, api)
     batch = {"tokens": jax.ShapeDtypeStruct(
         (n_micro, tcfg.microbatch, shape.seq_len + 1), jnp.int32)}
     state_sh, state_specs_tree = state_shardings(cfg, tcfg, api, mesh,
                                                  fsdp=tune.fsdp,
                                                  ep_2d=tune.ep_2d)
+    # the projection hook gets the params' PartitionSpecs so matched sharded
+    # leaves run the schedule executor in place (no gather) — this is what the
+    # hillclimb's roofline sees as the projection's collective cost
+    step_fn = TS.make_train_step(cfg, tcfg, api, impl=tune.attn_impl,
+                                 n_groups=n_groups, act_spec=act_spec,
+                                 logits_spec=logits_spec, mesh=mesh,
+                                 param_specs=state_specs_tree["params"])
     batch_sh = SH.named(mesh, {"tokens": SH.tokens_spec(mesh, shape,
                                                         tcfg.microbatch)})
     metrics_sh = SH.named(mesh, {"loss": P(), "grad_norm": P(), "lr": P()})

@@ -90,7 +90,8 @@ def main():
         act_spec = P(b_ax if len(b_ax) > 1 else b_ax[0], None, None)
         step_fn = jax.jit(make_train_step(
             cfg, tcfg, api, impl="naive" if args.smoke else "chunked",
-            n_groups=SH.dp_shards(mesh), act_spec=act_spec))
+            n_groups=SH.dp_shards(mesh), act_spec=act_spec,
+            mesh=mesh, param_specs=specs))
 
         for step in range(start, args.steps):
             t0 = time.perf_counter()

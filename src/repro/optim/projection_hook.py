@@ -11,23 +11,27 @@ vmapped — e.g. a stacked MoE weight (L, E, d, f) with bi-level ν projects eac
 (E, d, f) tensor tri-level per layer (head/expert-structured sparsity, §6 of
 the paper).
 
-Under pjit this is communication-minimal by construction (DESIGN.md §3): the
-q-norm aggregation reduces the FSDP-sharded axis (one small all-reduce), the
-ℓ1 solve runs on the tiny aggregate, the clip is local. core/sharded.py holds
-the explicit shard_map variant used by the hillclimb.
+Passing ``mesh=`` and ``param_specs=`` to :func:`make_projection_hook` makes
+the projection *explicitly* mesh-native: every matched leaf whose projected
+(trailing) axes are sharded executes the compiled schedule under shard_map in
+place — collective reduces of the aggregates, a gathered tiny outer solve,
+local applies (DESIGN.md §3) — instead of trusting GSPMD to discover the same
+decomposition; leading stacked axes become the executor's batch dims. Leaves
+with unsharded trailing axes (or without specs) keep the vmapped single-device
+path, which under pjit is still communication-minimal by construction.
 """
 
 from __future__ import annotations
 
 import re
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.types import ProjectionSpec
-from repro.core import ball, multilevel
+from repro.core import ball, multilevel, sharded
 from repro.core.masks import sparsity
 
 
@@ -67,6 +71,41 @@ def _method_resolver(spec: ProjectionSpec):
     return resolve
 
 
+def _sharded_leaf_key(mesh, pspec, ndim: int, need: int):
+    """The leaf's canonical ShardingKey IF the schedule executor should run
+    it: some trailing (projected) axis sharded and the spec
+    executor-representable — ``plan.canonical_sharding`` is the single parser
+    of spec entries (multi-axis entries like ``("pod", "data")`` make it
+    return None → the leaf falls back to the GSPMD path)."""
+    if pspec is None:
+        return None
+    from repro.core import plan as planmod
+
+    key = planmod.canonical_sharding((mesh, pspec), ndim)
+    if key is None or not any(n is not None for n in key.spec[ndim - need:]):
+        return None
+    return key
+
+
+def _project_leaf_sharded(w, spec: ProjectionSpec, radius, method, mesh, names):
+    """Project one sharded leaf in place via the schedule executor: leading
+    stacked axes are batch dims, no gather of the weight ever happens.
+    ``names`` is the canonical per-axis mesh-axis tuple (ShardingKey.spec)."""
+    need = sum(k for _, k in spec.levels)
+    batch = w.ndim - need
+    if spec.transpose:
+        # reverse the trailing (projected) axes — an involution, so the same
+        # permutation restores the layout (and permutes the spec with it)
+        perm = tuple(range(batch)) + tuple(reversed(range(batch, w.ndim)))
+        out = sharded.multilevel_project_sharded(
+            jnp.transpose(w, perm), list(spec.levels), radius, mesh=mesh,
+            spec=P(*(names[a] for a in perm)), method=method, batch_dims=batch)
+        return jnp.transpose(out, perm)
+    return sharded.multilevel_project_sharded(
+        w, list(spec.levels), radius, mesh=mesh, spec=P(*names),
+        method=method, batch_dims=batch)
+
+
 def _project_leaf(w, levels, radius, method, transpose=False):
     need = sum(k for _, k in levels)
 
@@ -86,25 +125,54 @@ def _project_leaf(w, levels, radius, method, transpose=False):
     return fn(w)
 
 
-def make_projection_hook(spec: ProjectionSpec | None):
+def _spec_table(param_specs):
+    """Flatten a PartitionSpec tree into a path-string → spec lookup."""
+    table = {}
+    if param_specs is None:
+        return table
+
+    def collect(path, s):
+        table[_path_str(path)] = s
+        return s
+
+    jax.tree_util.tree_map_with_path(collect, param_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    return table
+
+
+def make_projection_hook(spec: ProjectionSpec | None, *, mesh=None,
+                         param_specs=None):
     """Build the training-time projection hook ONCE (planner lifecycle,
     DESIGN.md §2): compile the regex, validate/resolve the θ-solver backend
     (including ``method="auto"`` via the planner — autotuned per distinct leaf
     workload, memoised forever), and return ``hook(params, step)`` for the
     train step to call every iteration. Per-step/per-trace cost is zero beyond
     the projection itself.
+
+    With ``mesh`` and ``param_specs`` (the params' PartitionSpec tree), every
+    matched leaf whose projected trailing axes are sharded runs the schedule
+    executor under shard_map in place — no weight gather (DESIGN.md §3).
     """
     if spec is None or not spec.enabled:
         return lambda params, step: params
     pat = re.compile(spec.pattern)
     need = sum(k for _, k in spec.levels)
     resolve = _method_resolver(spec)
+    specs_by_path = _spec_table(param_specs) if mesh is not None else {}
 
     def project_all(params):
         def one(path, w):
             name = _path_str(path)
             if w.ndim >= need and pat.search(name):
                 method = resolve(w.shape, w.dtype)
+                skey = None
+                if mesh is not None:
+                    skey = _sharded_leaf_key(mesh, specs_by_path.get(name),
+                                             w.ndim, need)
+                if skey is not None:
+                    return _project_leaf_sharded(
+                        w, spec, spec.radius, method, mesh, skey.spec
+                    ).astype(w.dtype)
                 return _project_leaf(w, spec.levels, spec.radius, method,
                                      transpose=spec.transpose).astype(w.dtype)
             return w

@@ -32,8 +32,9 @@ import jax.numpy as jnp
 from repro.core import multilevel
 from repro.core import plan as planmod
 
-# (shape, dtype name, canonical levels, requested method)
-GroupKey = Tuple[Tuple[int, ...], str, Tuple[Tuple[str, int], ...], str]
+# (shape, dtype name, canonical levels, requested method, sharding key)
+GroupKey = Tuple[Tuple[int, ...], str, Tuple[Tuple[str, int], ...], str,
+                 object]
 
 
 def _bucket(n: int) -> int:
@@ -66,15 +67,22 @@ class ProjectionService:
         # reject bad requests HERE, where the caller can handle it — a raise
         # inside flush() would abort a whole batch for one bad ticket
         multilevel._check_levels(y.shape, levels)
+        # committed mesh-sharded tensors get their own plan key: they execute
+        # through the sharded schedule executor, never gather-stacked with
+        # single-device traffic of the same shape
+        sharding = getattr(y, "sharding", None)
+        if not isinstance(sharding, jax.sharding.NamedSharding):
+            sharding = None
+        shard_key = planmod.canonical_sharding(sharding, y.ndim)
         requested = self.default_method if method is None else method
         requested = planmod.validate_backend(y.shape, y.dtype, levels,
-                                             requested)
+                                             requested, sharding=shard_key)
         radius = jnp.asarray(radius, y.dtype)
         if radius.ndim != 0:
             raise ValueError(
                 f"radius must be a scalar (one per request), got shape "
                 f"{radius.shape}")
-        key: GroupKey = (y.shape, y.dtype.name, levels, requested)
+        key: GroupKey = (y.shape, y.dtype.name, levels, requested, shard_key)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.setdefault(key, []).append((ticket, y, radius))
@@ -86,11 +94,21 @@ class ProjectionService:
         return sum(len(v) for v in self._pending.values())
 
     def flush(self) -> None:
-        """Execute every pending group (one vmap'd dispatch per group)."""
+        """Execute every pending group (one vmap'd dispatch per group;
+        sharded groups run the mesh plan per request — stacking them would
+        gather the shards, defeating the sharded executor)."""
         for key in list(self._pending):
-            (shape, dtype, levels, method), reqs = key, self._pending.pop(key)
+            (shape, dtype, levels, method, shard_key), reqs = \
+                key, self._pending.pop(key)
             try:
-                if len(reqs) == 1:
+                if shard_key is not None:
+                    # per-request dispatch, so these do NOT count into
+                    # batched_requests (= requests that shared one vmap)
+                    p = planmod.make_plan(shape, dtype, levels, method=method,
+                                          sharding=shard_key)
+                    for ticket, y, radius in reqs:
+                        self._results[ticket] = p(y, radius)
+                elif len(reqs) == 1:
                     ticket, y, radius = reqs[0]
                     p = planmod.make_plan(shape, dtype, levels, method=method)
                     self._results[ticket] = p(y, radius)

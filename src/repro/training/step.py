@@ -61,14 +61,18 @@ def make_loss_fn(cfg: ArchConfig, api, *, impl: str, n_groups: int,
 
 def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
                     impl: str = "chunked", n_groups: int = 1,
-                    act_spec=None, logits_spec=None) -> Callable:
+                    act_spec=None, logits_spec=None,
+                    mesh=None, param_specs=None) -> Callable:
     compute_dtype = jnp.dtype(tcfg.compute_dtype)
     loss_fn = make_loss_fn(cfg, api, impl=impl, n_groups=n_groups,
                            remat=tcfg.remat, compute_dtype=compute_dtype,
                            act_spec=act_spec, logits_spec=logits_spec)
     # plan the projection ONCE at step-build time (regex + backend resolution,
-    # incl. method="auto" autotuning) — the per-step call is just the math
-    project = make_projection_hook(tcfg.projection)
+    # incl. method="auto" autotuning) — the per-step call is just the math.
+    # mesh + param_specs make it mesh-native: sharded leaves project in place
+    # under shard_map instead of relying on GSPMD (DESIGN.md §3)
+    project = make_projection_hook(tcfg.projection, mesh=mesh,
+                                   param_specs=param_specs)
 
     def train_step(state, batch):
         params = state["params"]

@@ -14,11 +14,15 @@ def _run(code: str, devices: int = 8, timeout=420):
     prog = f"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 {textwrap.dedent(code)}
 """
+    # JAX_PLATFORMS=cpu also in the env: with it unset, a host that has
+    # libtpu installed stalls for minutes probing TPU instance metadata
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=timeout,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"})
     assert res.returncode == 0, res.stderr[-3000:]
     return res.stdout
 
@@ -38,8 +42,7 @@ class TestShardedProjection:
         rng = np.random.default_rng(0)
         y = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
         fn = make_sharded_bilevel(mesh, "model")
-        with jax.set_mesh(mesh):
-            got = jax.jit(fn)(y, 3.0)
+        got = jax.jit(fn)(y, 3.0)
         want = bilevel_l1inf(y, 3.0, method="sort")
         print("MAXDIFF", float(jnp.abs(got - want).max()))
         """)
@@ -49,17 +52,16 @@ class TestShardedProjection:
         out = _run("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
-        from repro.core.sharded import trilevel_project_sharded
+        from repro.core.sharded import shard_map, trilevel_project_sharded
         from repro.core import multilevel_norm
         mesh = jax.make_mesh((8,), ("model",))
         rng = np.random.default_rng(1)
         y = jnp.asarray(rng.normal(size=(4, 16, 64)), jnp.float32)
         body = functools.partial(trilevel_project_sharded, axis_name="model")
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(P(None, None, "model"), P()),
-                           out_specs=P(None, None, "model"))
-        with jax.set_mesh(mesh):
-            got = jax.jit(fn)(y, jnp.float32(2.0))
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(None, None, "model"), P()),
+                       out_specs=P(None, None, "model"))
+        got = jax.jit(fn)(y, jnp.float32(2.0))
         n = multilevel_norm(got, [("inf", 1), ("inf", 1), (1, 1)])
         print("NORM", float(n))
         """)

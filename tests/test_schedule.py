@@ -1,0 +1,137 @@
+"""The schedule IR (core.schedule): compilation structure, executor equality
+with the recursion it replaced, batch dims, and the collective-bytes model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ball, multilevel
+from repro.core import schedule as SC
+
+BILEVEL = [("inf", 1), ("1", 1)]
+TRILEVEL = [("inf", 1), ("inf", 1), ("1", 1)]
+
+
+def _rand(shape, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def _reference_recursion(y, levels, radius, method="sort"):
+    """The pre-schedule Algorithm 6 recursion, kept as the oracle."""
+    (q, k), rest = levels[0], levels[1:]
+    if not rest:
+        flat = y.reshape(-1)
+        return ball.project_ball(flat, q, radius, method=method).reshape(y.shape)
+    inner = tuple(range(k))
+    v = ball.norm_reduce(y, q, axes=inner)
+    u = _reference_recursion(v, rest, radius, method)
+    return ball.project_grouped(y, q, u, inner_axes=inner, method=method)
+
+
+class TestCompile:
+    def test_step_structure_trilevel(self):
+        s = SC.compile_schedule((4, 8, 16), TRILEVEL)
+        kinds = [type(st).__name__ for st in s.steps]
+        assert kinds == ["ReduceLevel", "ReduceLevel", "OuterSolve",
+                         "ApplyGroup", "ApplyGroup"]
+        assert s.reduces[0].axes == (0,) and s.reduces[1].axes == (0,)
+        assert s.stage_shapes == ((4, 8, 16), (8, 16), (16,))
+        assert s.solve.norm == "1" and s.solve_size == 16
+        # applies mirror the reduces, outermost level first
+        assert [a.norm for a in s.applies] == ["inf", "inf"]
+
+    def test_single_level_flattens(self):
+        s = SC.compile_schedule((4, 8), [("1", 2)])
+        assert s.reduces == () and s.applies == ()
+        assert s.solve_size == 32
+
+    def test_batch_dims_offset_axes(self):
+        s = SC.compile_schedule((3, 4, 8, 16), TRILEVEL, batch_dims=1)
+        assert s.reduces[0].axes == (1,) and s.reduces[1].axes == (1,)
+        assert s.stage_shapes[-1] == (3, 16)
+        assert s.solve_size == 16  # per batch element
+
+    def test_compile_is_cached(self):
+        a = SC.compile_schedule((4, 8), BILEVEL)
+        b = SC.compile_schedule((4, 8), [(jnp.inf, 1), (1, 1)])
+        assert a is b  # canonicalization folds to the same cached object
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="covers"):
+            SC.compile_schedule((4, 8, 2), BILEVEL)
+        with pytest.raises(ValueError, match="covers"):
+            SC.compile_schedule((4, 8), BILEVEL, batch_dims=1)
+        with pytest.raises(ValueError, match="at least one axis"):
+            SC.compile_schedule((4, 8), [("inf", 0), ("1", 2)])
+
+
+class TestExecute:
+    @pytest.mark.parametrize("shape,levels", [
+        ((6, 10), BILEVEL),
+        ((3, 6, 10), TRILEVEL),
+        ((4, 5), [("2", 1), ("1", 1)]),
+        ((4, 5), [("1", 1), ("1", 1)]),
+        ((3, 4, 5), [("2", 1), ("1", 2)]),
+        ((4, 8), [("1", 2)]),
+        ((3, 4, 5), [("1", 1), ("2", 1), ("inf", 1)]),
+    ])
+    @pytest.mark.parametrize("method", ["sort", "filter"])
+    def test_matches_reference_recursion(self, shape, levels, method):
+        y = _rand(shape, seed=abs(hash((shape, method))) % 2**31)
+        sched = SC.compile_schedule(shape, levels)
+        got = SC.execute(y, sched, 1.5, method=method)
+        want = _reference_recursion(y, SC.canonical_levels(levels), 1.5, method)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_multilevel_project_runs_the_schedule(self):
+        y = _rand((3, 6, 10), seed=3)
+        got = multilevel.multilevel_project(y, TRILEVEL, 1.0)
+        want = SC.execute(y, SC.compile_schedule(y.shape, TRILEVEL), 1.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_batch_dims_equal_vmap(self):
+        y = _rand((4, 6, 10), seed=4)
+        sched = SC.compile_schedule(y.shape, BILEVEL, batch_dims=1)
+        got = SC.execute(y, sched, 1.2)
+        want = jax.vmap(lambda w: multilevel.multilevel_project(
+            w, BILEVEL, 1.2))(y)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_feasible_after_execute(self):
+        y = _rand((5, 7), seed=5)
+        sched = SC.compile_schedule(y.shape, BILEVEL)
+        out = SC.execute(y, sched, 2.0)
+        assert float(multilevel.multilevel_norm(out, BILEVEL)) <= 2.0 * (1 + 1e-5)
+
+
+class TestCollectiveBytes:
+    def test_bilevel_ratio_is_aggregated_extent(self):
+        n, m = 1000, 10000
+        cb = SC.sharded_collective_bytes((n, m), BILEVEL, (None, "model"),
+                                         {"model": 8})
+        assert cb["schedule_bytes"] == m * 4       # the gathered aggregate
+        assert cb["gather_bytes"] == n * m * 4
+        assert cb["ratio"] == pytest.approx(n)
+
+    def test_reduced_sharded_axis_needs_no_gather(self):
+        # sharded axis is aggregated at level 0 -> combine payload is the
+        # aggregate; the outer solve is already replicated (payload 0)
+        cb = SC.sharded_collective_bytes((1000, 64), [("2", 1), ("1", 1)],
+                                         ("model", None), {"model": 8})
+        steps = {s["step"]: s["bytes"] for s in cb["per_step"]}
+        assert steps["reduce_2"] == 64 * 4
+        assert steps["solve_1"] == 0
+        assert steps["apply_2"] == 0
+
+    def test_distributed_l1_apply_counts_sweeps(self):
+        cb = SC.sharded_collective_bytes((128, 64), [("1", 1), ("1", 1)],
+                                         ("model", None), {"model": 8})
+        steps = {s["step"]: s["bytes"] for s in cb["per_step"]}
+        assert steps["apply_1"] == 64 * 4 * SC._L1_APPLY_SWEEPS
+
+    def test_unsharded_design_moves_nothing(self):
+        cb = SC.sharded_collective_bytes((64, 64), BILEVEL, (None, None),
+                                         {"model": 8})
+        assert cb["schedule_bytes"] == 0
