@@ -29,6 +29,7 @@ _JSON_NAMES = {
     "methods": "BENCH_projection_methods.json",
     "plan": "BENCH_projection_plan.json",
     "sharded": "BENCH_sharded_multilevel.json",
+    "codegen": "BENCH_codegen_kernels.json",
     "sae": "BENCH_sae_tables.json",
 }
 
@@ -56,7 +57,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
-                         "sharded,sae")
+                         "sharded,codegen,sae")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -74,6 +75,7 @@ def main(argv=None) -> None:
         "methods": lambda: projections.methods_sweep(full=args.full),
         "plan": lambda: projections.plan_sweep(full=args.full),
         "sharded": lambda: projections.sharded_sweep(full=args.full),
+        "codegen": lambda: projections.codegen_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
     }

@@ -14,10 +14,11 @@ enclosing jit. The planner hoists all of that to *build time*:
     execute  — ``plan(y, radius)`` runs the reused jitted executable
 
 Backends are (a) every ℓ1 θ-solver in the ``core.ball`` registry, applied
-through ``multilevel_project``, and (b) *specialized* fused executables
-registered via ``register_plan_backend`` — e.g. the fused Pallas kernels in
-``repro.kernels.plan_backends`` (bi-level ℓ1,∞ and tri-level ℓ1,∞,∞), which
-are offered on TPU (or under ``interpret=True`` for tests).
+through ``multilevel_project``, and (b) *specialized* executables registered
+via ``register_plan_backend`` — the ``codegen`` generated fused kernels
+(``repro.kernels.plan_backends`` / ``repro.kernels.codegen``: any unsharded
+norm design the tiler accepts), offered on TPU (or under ``interpret=True``
+for tests), and the ``sharded`` schedule executor for mesh-committed keys.
 
 Example (fixed backend; ``method="auto"`` benchmarks first):
 

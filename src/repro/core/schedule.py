@@ -106,6 +106,38 @@ class Schedule(NamedTuple):
         lead = self.stage_shapes[-1][self.batch_dims:]
         return math.prod(lead) if lead else 1
 
+    @property
+    def level_group_sizes(self) -> Tuple[int, ...]:
+        """Aggregated extent g_t of each ReduceLevel (the product of its axes'
+        dims in its stage input) — the group length of the matching apply."""
+        sizes = []
+        for i, red in enumerate(self.reduces):
+            shp = self.stage_shapes[i]
+            sizes.append(math.prod(shp[a] for a in red.axes))
+        return tuple(sizes)
+
+    @property
+    def canonical_shape(self) -> Tuple[int, ...]:
+        """The collapsed view ``batch… + (g_1, …, g_{L-1}, solve_size)``.
+
+        Each reduce level's axes fuse into one axis and the surviving axes
+        flatten into the lane axis. Every level's axes are contiguous and in
+        order, so the reshape is free — this is the shape the kernel code
+        generator (``kernels/codegen``) tiles, and ``canonical_stage_shapes``
+        gives the matching per-stage views the tiler sizes VMEM blocks from.
+        """
+        batch = self.shape[:self.batch_dims]
+        return batch + self.level_group_sizes + (self.solve_size,)
+
+    @property
+    def canonical_stage_shapes(self) -> Tuple[Tuple[int, ...], ...]:
+        """Collapsed ``stage_shapes``: entry i is the canonical input shape of
+        the i-th reduce (entry -1 is what the OuterSolve sees)."""
+        canon = self.canonical_shape
+        b = self.batch_dims
+        return tuple(canon[:b] + canon[b + i:]
+                     for i in range(len(self.reduces) + 1))
+
 
 def canonical_levels(levels: Sequence[Level]) -> Tuple[Tuple[str, int], ...]:
     """Canonicalize a norm design to ``(('1'|'2'|'inf', n_axes), ...)``."""

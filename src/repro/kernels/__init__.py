@@ -1,11 +1,14 @@
 """repro.kernels — Pallas TPU kernels for the projection + attention hot spots.
 
-Every kernel has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes in
-interpret mode against it. ops.py holds the jit'd platform dispatchers.
+``codegen/`` compiles any schedule IR to fused kernels; the hand-written
+``bilevel_l1inf.py`` / ``trilevel_l1infinf.py`` kernels are the golden
+references its equality tests pin against. Every kernel has a pure-jnp oracle
+in ref.py; tests sweep shapes/dtypes in interpret mode against it. ops.py
+holds the planner-routed dispatchers.
 """
 
 from .bilevel_l1inf import bilevel_l1inf_pallas, clip_pallas, colmax_pallas  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
 from .l1ball import KERNEL_METHODS, project_l1_pallas  # noqa: F401
 from .trilevel_l1infinf import trilevel_l1infinf_pallas  # noqa: F401
-from . import ops, plan_backends, ref  # noqa: F401
+from . import codegen, ops, plan_backends, ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""repro.kernels.codegen — compile any schedule IR to fused Pallas kernels.
+
+The subsystem has three layers (DESIGN.md §4, "IR → Pallas lowering"):
+
+* ``tiling``   — the grid/block planner: collapses a compiled ``Schedule`` to
+  its canonical ``(g_1, …, g_{L-1}, m)`` view and picks VMEM-resident block
+  sizes (or rejects the design);
+* ``lowering`` — emits the fused kernels: one streaming reduce pass producing
+  every forward aggregate, the tiny outer θ-solve, one fused apply epilogue;
+* this module — the cached entry points the planner backend
+  (``kernels/plan_backends.py``) and the ``ops`` dispatchers build on.
+
+Generated kernels are pinned against the hand-written golden kernels
+(``bilevel_l1inf.py`` / ``trilevel_l1infinf.py``) by ``tests/test_codegen.py``
+and benchmarked against them by ``benchmarks/run.py --only codegen``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import compile_schedule, canonical_levels
+
+from . import lowering, tiling  # noqa: F401
+from .lowering import generate  # noqa: F401
+from .tiling import TilePlan, plan_tiles  # noqa: F401
+
+
+def supported(shape, levels, dtype) -> bool:
+    """True when the tiler accepts (shape, levels, dtype) — the availability
+    gate of the ``codegen`` planner backend (device checks live there)."""
+    try:
+        sched = compile_schedule(shape, levels)
+    except ValueError:
+        return False
+    return plan_tiles(sched, dtype) is not None
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_build(shape, levels, dtype_name: str, method: str,
+                  interpret: bool, jit: bool) -> Callable:
+    sched = compile_schedule(shape, levels)
+    fn = lowering.generate(sched, np.dtype(dtype_name), method=method,
+                           interpret=interpret)
+    return jax.jit(fn) if jit else fn
+
+
+def build(shape, levels, dtype, *, method: str = "bisect",
+          interpret: bool = False, jit: bool = False) -> Callable:
+    """Generate (or fetch from cache) the fused ``(y, radius) -> x`` kernel
+    for one workload. ``method`` selects the outer θ-solve backend."""
+    return _cached_build(tuple(int(s) for s in shape),
+                         canonical_levels(levels), np.dtype(dtype).name,
+                         method, bool(interpret), bool(jit))
+
+
+def codegen_project(y: jax.Array, levels: Sequence, radius, *,
+                    method: str = "bisect", interpret: bool = False) -> jax.Array:
+    """Project ``y`` with a generated fused kernel (eager entry point).
+
+    The generated executable is cached per (shape, dtype, levels, method,
+    interpret) and jitted, so repeat calls pay only dispatch.
+    """
+    y = jnp.asarray(y)
+    fn = build(jnp.shape(y), levels, y.dtype, method=method,
+               interpret=interpret, jit=True)
+    return fn(y, radius)

@@ -1,0 +1,334 @@
+"""Schedule-IR → fused Pallas kernel lowering (DESIGN.md §4).
+
+A compiled ``Schedule`` is ``ReduceLevel* → OuterSolve → ApplyGroup*``. The
+generator lowers that to the same three-stage structure the hand-written
+golden kernels (``bilevel_l1inf.py`` / ``trilevel_l1infinf.py``) use, but for
+*any* norm design the tiler accepts:
+
+* **reduce mega-kernel** — ONE streaming pass over Y produces every forward
+  aggregate: each intermediate ``ReduceLevel`` folds its (VMEM-resident) axis
+  with the norm's monoid inside the tile, and the final level accumulates
+  across the sequential grid axis (``max`` for ℓ∞, ``add`` for ℓ1, ``add`` of
+  squares for ℓ2 — finalized after the pass). Y is read exactly once here.
+* **outer stage** — the tiny θ-solve on the (m,)-vector: the VPU-shaped
+  bisect/filter VMEM kernels from ``kernels/l1ball.py`` for an ℓ1 solve
+  (jnp fallback past the single-block limit or for ``method="sort"``), a
+  rescale/clip for ℓ2/ℓ∞.
+* **apply epilogue** — ONE elementwise pass over Y replays the backward
+  sweep per tile: the radii chain starts at the solved aggregate and walks
+  down through the saved per-tile aggregates (ℓ∞ → clip, ℓ2 → rescale by the
+  saved *global* aggregate, ℓ1 → an in-tile batched bisection θ-solve per
+  group), writing X. Y is read exactly twice end-to-end — the same
+  information-theoretic minimum as the golden kernels.
+
+Reverse-mode: generated kernels carry a ``custom_vjp`` whose backward
+recomputes through the differentiable jnp schedule executor (exactly the
+``sort`` oracle's Jacobian) — a fused backward kernel is a ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ball, schedule as sched_mod
+from repro.core.schedule import Schedule
+
+from .._compat import CompilerParams
+from .tiling import TilePlan, plan_tiles
+
+_GROUP_SOLVE_ITERS = 64  # in-tile grouped θ-solves: fixed-budget bisection
+
+
+class Monoid(NamedTuple):
+    """In-VMEM staged reduction for one norm, on non-negative inputs.
+
+    ``tile`` folds an axis inside one tile and finalizes (what intermediate
+    reduces use); ``part``/``combine``/``finalize`` split the same reduction
+    into a raw per-block accumulator + cross-grid-step combine + a post-pass
+    finalizer (what the sequential-axis reduce uses: ℓ2 accumulates in the
+    squared domain, so its finalize is the √ applied after the last step).
+    """
+
+    tile: Callable[[jax.Array, int], jax.Array]
+    part: Callable[[jax.Array, int], jax.Array]
+    combine: Callable[[jax.Array, jax.Array], jax.Array]
+    finalize: Callable[[jax.Array], jax.Array]
+
+
+MONOIDS = {
+    "1": Monoid(
+        tile=lambda a, ax: jnp.sum(a, axis=ax),
+        part=lambda a, ax: jnp.sum(a, axis=ax),
+        combine=jnp.add,
+        finalize=lambda acc: acc,
+    ),
+    "2": Monoid(
+        tile=lambda a, ax: jnp.sqrt(jnp.sum(a * a, axis=ax)),
+        part=lambda a, ax: jnp.sum(a * a, axis=ax),
+        combine=jnp.add,
+        finalize=jnp.sqrt,
+    ),
+    "inf": Monoid(
+        tile=lambda a, ax: jnp.max(a, axis=ax),
+        part=lambda a, ax: jnp.max(a, axis=ax),
+        combine=jnp.maximum,
+        finalize=lambda acc: acc,
+    ),
+}
+
+
+def _grouped_l1_tile(x: jax.Array, radii_b: jax.Array,
+                     iters: int = _GROUP_SOLVE_ITERS) -> jax.Array:
+    """Project every axis-0 slice of ``x`` onto its own ℓ1 ball, in-tile.
+
+    ``radii_b`` broadcasts against ``x`` with a size-1 group axis. Batched
+    bisection on θ — elementwise ops + axis-0 reductions only, so it stays
+    VPU-shaped whatever the surrounding tile shape is.
+    """
+    a = jnp.abs(x)
+    hi = jnp.max(a, axis=0, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, loh):
+        lo, hi = loh
+        mid = 0.5 * (lo + hi)
+        phi = jnp.sum(jnp.maximum(a - mid, 0.0), axis=0, keepdims=True)
+        too_small = phi > radii_b
+        return jnp.where(too_small, mid, lo), jnp.where(too_small, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    inside = jnp.sum(a, axis=0, keepdims=True) <= radii_b
+    theta = jnp.where(inside, jnp.zeros_like(lo), 0.5 * (lo + hi))
+    return jnp.sign(x) * jnp.maximum(a - theta, 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Reduce mega-kernel
+# --------------------------------------------------------------------------- #
+
+
+def _make_reduce_kernel(norms: Sequence[str], n_total: int, block_n: int):
+    """Kernel body: every forward aggregate of the schedule in one pass.
+
+    ``norms`` are the reduce norms q_1 … q_{L-1}. Outputs are
+    ``[v_1, …, v_{L-2}, acc]`` where v_t keeps the (block_n, block_m) tile
+    structure and ``acc`` is the raw (1, block_m) accumulator of the final
+    level, combined across sequential grid steps.
+    """
+    inter, last = tuple(norms[:-1]), norms[-1]
+
+    def kernel(y_ref, *out_refs):
+        i = pl.program_id(1)  # sequential row-block index (last grid axis)
+        cur = jnp.abs(y_ref[...])
+        for t, q in enumerate(inter):
+            cur = MONOIDS[q].tile(cur, 0)   # fold the resident axis g_{t+1}
+            out_refs[t][...] = cur
+        # cur is (block_n, block_m): mask rows past the true edge with 0 —
+        # the identity of every monoid here (values are non-negative)
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 0) \
+            + i * block_n
+        cur = jnp.where(row_ids < n_total, cur, 0.0)
+        part = MONOIDS[last].part(cur, 0)[None]          # (1, block_m)
+        acc_ref = out_refs[-1]
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = part
+
+        @pl.when(i > 0)
+        def _acc():
+            acc_ref[...] = MONOIDS[last].combine(acc_ref[...], part)
+
+    return kernel
+
+
+def _y_spec(tp: TilePlan):
+    k = len(tp.lead)
+    return pl.BlockSpec(tp.lead + (tp.block_n, tp.block_m),
+                        lambda j, i, k=k: (0,) * k + (i, j))
+
+
+def _agg_specs_shapes(tp: TilePlan, dtype):
+    """BlockSpecs + ShapeDtypeStructs of the intermediate aggregates v_t."""
+    specs, shapes = [], []
+    for t in range(1, len(tp.lead) + 1):
+        ld = tp.lead[t:]
+        specs.append(pl.BlockSpec(ld + (tp.block_n, tp.block_m),
+                                  lambda j, i, k=len(ld): (0,) * k + (i, j)))
+        shapes.append(jax.ShapeDtypeStruct(ld + (tp.n, tp.m), dtype))
+    return specs, shapes
+
+
+def _row_spec(tp: TilePlan):
+    return pl.BlockSpec((1, tp.block_m), lambda j, i: (0, j))
+
+
+def _reduce_call(y: jax.Array, tp: TilePlan, norms: Sequence[str],
+                 interpret: bool):
+    grid = (pl.cdiv(tp.m, tp.block_m), pl.cdiv(tp.n, tp.block_n))
+    agg_specs, agg_shapes = _agg_specs_shapes(tp, y.dtype)
+    outs = pl.pallas_call(
+        _make_reduce_kernel(norms, n_total=tp.n, block_n=tp.block_n),
+        grid=grid,
+        in_specs=[_y_spec(tp)],
+        out_specs=agg_specs + [_row_spec(tp)],
+        out_shape=agg_shapes + [jax.ShapeDtypeStruct((1, tp.m), y.dtype)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(y)
+    return list(outs[:-1]), outs[-1][0]   # ([v_1, …, v_{L-2}], raw acc (m,))
+
+
+# --------------------------------------------------------------------------- #
+# Apply epilogue
+# --------------------------------------------------------------------------- #
+
+
+def _make_apply_kernel(norms: Sequence[str]):
+    """Kernel body: the backward sweep fused into one elementwise pass.
+
+    Inputs: ``y, v_1, …, v_{L-2}, [v_final_row,] u_row``; output: the
+    projected tile (the final-aggregate row rides along only for an ℓ2 last
+    reduce level, whose rescale needs the saved *global* norm). The radii
+    chain ``w`` starts at the solved aggregate and walks levels L-1 → 1;
+    every stage input it needs is a saved forward aggregate already resident
+    in the tile.
+    """
+    L = len(norms) + 1
+    has_vfin = norms[-1] == "2"
+
+    def kernel(*refs):
+        y_ref, v_refs = refs[0], refs[1:L - 1]
+        vfin_ref = refs[L - 1] if has_vfin else None
+        u_ref, out_ref = refs[-2], refs[-1]
+        stages = [y_ref[...]] + [v[...] for v in v_refs]  # s_0 … s_{L-2}
+        # level L-1: its group runs along the sublane axis of the 2-D tile
+        x, q, w = stages[-1], norms[-1], u_ref[...]
+        if q == "inf":
+            w = jnp.clip(x, -w, w)
+        elif q == "2":
+            vfin = vfin_ref[...]
+            scale = jnp.where(vfin > w, w / jnp.maximum(vfin, 1e-30), 1.0)
+            w = x * scale
+        else:  # "1" — tiling pinned the whole group axis into this block
+            w = _grouped_l1_tile(x, w)
+        # levels L-2 … 1: group axis = the leading resident axis of each
+        # stage input; radii/aggregates live one stage up (w's shape)
+        for lvl in range(L - 2, 0, -1):
+            x, agg, q = stages[lvl - 1], stages[lvl], norms[lvl - 1]
+            if q == "inf":
+                w = jnp.clip(x, -w[None], w[None])
+            elif q == "2":
+                scale = jnp.where(agg > w, w / jnp.maximum(agg, 1e-30), 1.0)
+                w = x * scale[None]
+            else:
+                w = _grouped_l1_tile(x, w[None])
+        out_ref[...] = w
+
+    return kernel
+
+
+def _apply_call(y: jax.Array, aggs, vfin: jax.Array, u: jax.Array,
+                tp: TilePlan, norms: Sequence[str], interpret: bool):
+    grid = (pl.cdiv(tp.m, tp.block_m), pl.cdiv(tp.n, tp.block_n))
+    agg_specs, _ = _agg_specs_shapes(tp, y.dtype)
+    row = lambda v: v.reshape(1, tp.m).astype(y.dtype)  # noqa: E731
+    rows = ([row(vfin)] if norms[-1] == "2" else []) + [row(u)]
+    return pl.pallas_call(
+        _make_apply_kernel(norms),
+        grid=grid,
+        in_specs=[_y_spec(tp)] + agg_specs
+                 + [_row_spec(tp)] * len(rows),
+        out_specs=_y_spec(tp),
+        out_shape=jax.ShapeDtypeStruct(tp.canon_shape, y.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(y, *aggs, *rows)
+
+
+# --------------------------------------------------------------------------- #
+# Outer stage + the generator
+# --------------------------------------------------------------------------- #
+
+
+def _solve_outer_vec(v: jax.Array, norm: str, radius, method: str,
+                     interpret: bool) -> jax.Array:
+    """Project the finalized (m,) aggregate onto the outer ball."""
+    if norm == "1":
+        from ..l1ball import outer_l1_solve
+
+        if ball.resolve_method(method) in ("bisect", "filter"):
+            return outer_l1_solve(v, radius, method=method,
+                                  interpret=interpret)
+        return ball.project_l1(v, radius, method=method)
+    if norm == "2":
+        return ball.project_l2(v, radius)
+    return jnp.minimum(v, jnp.asarray(radius, v.dtype))  # ℓ∞ on v ≥ 0
+
+
+def generate(sched: Schedule, dtype, *, method: str = "bisect",
+             interpret: bool = False) -> Callable:
+    """Compile ``sched`` into a fused ``(y, radius) -> x`` callable.
+
+    ``method`` picks the *outer* θ-solve backend (the in-tile grouped solves
+    are always the fixed-budget bisection — stable latency, VPU-shaped).
+    Leading batch axes lower as vmaps of the batch-free kernel (the batch
+    axes join the Pallas grid). Raises ``ValueError`` when the tiler rejects
+    the design — gate with :func:`tiling.plan_tiles` first.
+    """
+    if sched.batch_dims:
+        base_sched = sched_mod.compile_schedule(
+            sched.shape[sched.batch_dims:], sched.levels)
+        fn = generate(base_sched, dtype, method=method, interpret=interpret)
+        for _ in range(sched.batch_dims):
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn
+    tp = plan_tiles(sched, dtype)
+    if tp is None:
+        raise ValueError(
+            f"codegen cannot lower levels={sched.levels} on shape="
+            f"{sched.shape}: no VMEM-resident tiling (or flat non-l1 solve)")
+    norms = [q for q, _ in sched.levels]
+
+    def raw(y, radius):
+        yc = y.reshape(tp.canon_shape)
+        if len(norms) == 1:
+            out = _solve_outer_vec(yc, norms[0], radius, method, interpret)
+            return out.reshape(y.shape)
+        aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
+        vfin = MONOIDS[norms[-2]].finalize(acc)
+        u = _solve_outer_vec(vfin, norms[-1], radius, method, interpret)
+        x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
+        return x.reshape(y.shape)
+
+    @jax.custom_vjp
+    def fused(y, radius):
+        return raw(y, radius)
+
+    def fwd(y, radius):
+        return raw(y, radius), (y, radius)
+
+    def bwd(res, g):
+        y, radius = res
+        _, vjp = jax.vjp(
+            lambda yy, rr: sched_mod.execute(yy, sched, rr, method="sort"),
+            y, radius)
+        return vjp(g)
+
+    fused.defvjp(fwd, bwd)
+
+    @functools.wraps(fused)
+    def entry(y, radius):
+        y = jnp.asarray(y)
+        return fused(y, jnp.asarray(radius, y.dtype))
+
+    return entry

@@ -1,70 +1,48 @@
-"""Fused Pallas kernels as projection-planner backends (DESIGN.md §2).
+"""Generated fused kernels as a projection-planner backend (DESIGN.md §2/§4).
 
-Importing this module registers the specialized executables with
+Importing this module registers the ``codegen`` backend with
 ``repro.core.plan`` (the planner imports it lazily on first ``make_plan``, so
-``core`` never imports ``kernels`` at module load):
+``core`` never imports ``kernels`` at module load): the kernel code generator
+(``kernels/codegen``) lowers ANY unsharded norm design the tiler accepts to a
+fused reduce → θ-solve → apply kernel pipeline — eligible on TPU, or anywhere
+under ``interpret=True`` (correctness tests only; interpret mode is orders of
+magnitude slower than the jnp path, so ``method="auto"`` will never pick it
+off-TPU, by measurement).
 
-* ``fused_bilevel``  — ``bilevel_l1inf_pallas``  for ν = [(∞,1),(1,1)], 2-D
-* ``fused_trilevel`` — ``trilevel_l1infinf_pallas`` for ν = [(∞,1),(∞,1),(1,1)], 3-D
-
-Both are eligible on TPU, or anywhere under ``interpret=True`` (correctness
-tests only — interpret mode is orders of magnitude slower than the jnp path,
-so ``method="auto"`` will never pick them off-TPU, by measurement).
+The hand-written fused kernels (``bilevel_l1inf.py``/``trilevel_l1infinf.py``)
+are no longer registered as backends: they are the *golden references* the
+codegen equality tests pin against (``tests/test_codegen.py``) and the
+baseline of ``benchmarks/run.py --only codegen``.
 """
 
 from __future__ import annotations
 
-import functools
-
 from repro.core import plan as planmod
 
-from .bilevel_l1inf import bilevel_l1inf_pallas
-from .trilevel_l1infinf import trilevel_l1infinf_pallas
+from . import codegen
 
-# the VPU-shaped outer θ-solve; kernels exist for "bisect" and "filter" and
-# bisect has no data-dependent sweep count (stable latency for a served plan)
+# the outer θ-solve of generated kernels: "bisect" has a VMEM kernel and no
+# data-dependent sweep count (stable latency for a served plan)
 _OUTER_METHOD = "bisect"
 
-_BILEVEL_LEVELS = (("inf", 1), ("1", 1))
-_TRILEVEL_LEVELS = (("inf", 1), ("inf", 1), ("1", 1))
 
-
-def _on_tpu_or_interpret(key: planmod.PlanKey) -> bool:
+def _codegen_available(key: planmod.PlanKey) -> bool:
     # single-device workloads only: a mesh-sharded key routes to the sharded
     # schedule executor, not to a fused single-chip kernel
-    return (key.device == "tpu" or key.interpret) and key.sharding is None
+    if key.sharding is not None or not (key.device == "tpu" or key.interpret):
+        return False
+    return codegen.supported(key.shape, key.levels, key.dtype)
 
 
-def _bilevel_available(key: planmod.PlanKey) -> bool:
-    return (key.levels == _BILEVEL_LEVELS and len(key.shape) == 2
-            and _on_tpu_or_interpret(key))
-
-
-def _trilevel_available(key: planmod.PlanKey) -> bool:
-    return (key.levels == _TRILEVEL_LEVELS and len(key.shape) == 3
-            and _on_tpu_or_interpret(key))
-
-
-def _build_bilevel(key: planmod.PlanKey):
-    return functools.partial(bilevel_l1inf_pallas, method=_OUTER_METHOD,
-                             interpret=key.interpret)
-
-
-def _build_trilevel(key: planmod.PlanKey):
-    return functools.partial(trilevel_l1infinf_pallas, method=_OUTER_METHOD,
-                             interpret=key.interpret)
+def _build_codegen(key: planmod.PlanKey):
+    return codegen.build(key.shape, key.levels, key.dtype,
+                         method=_OUTER_METHOD, interpret=key.interpret)
 
 
 planmod.register_plan_backend(planmod.PlanBackend(
-    name="fused_bilevel",
-    available=_bilevel_available,
-    build=_build_bilevel,
-    description="Pallas bi-level l1,inf: colmax -> P1 kernel -> clip",
-))
-
-planmod.register_plan_backend(planmod.PlanBackend(
-    name="fused_trilevel",
-    available=_trilevel_available,
-    build=_build_trilevel,
-    description="Pallas tri-level l1,inf,inf: fused reduce -> P1 kernel -> apply",
+    name="codegen",
+    available=_codegen_available,
+    build=_build_codegen,
+    description="generated fused Pallas kernels: one streaming reduce pass "
+                "-> VMEM theta-solve -> fused apply epilogue (kernels/codegen)",
 ))

@@ -1,5 +1,10 @@
 """Fused tri-level ℓ1,∞,∞ Pallas kernels (paper Algorithm 5, DESIGN.md §4).
 
+GOLDEN REFERENCE: since the kernel code generator landed
+(``kernels/codegen``), this hand-written kernel is no longer a planner
+backend — it pins the generated tri-level kernel in ``tests/test_codegen.py``
+and baselines it in ``benchmarks/run.py --only codegen``.
+
 ``TP^{1,∞,∞}_η(Y)`` for Y ∈ R^{c,n,m} decomposes into
 
   pass 1  reduce:  v2[i,j] = max_c |Y[c,i,j]|   AND   v1[j] = max_i v2[i,j]

@@ -88,8 +88,8 @@ class TestMakePlan:
         with pytest.raises(ValueError, match="radius_kind"):
             plan.make_plan((4, 6), jnp.float32, BILEVEL, radius_kind="maybe")
         with pytest.raises(ValueError, match="not available"):
-            # fused kernel ineligible off-TPU without interpret
-            plan.make_plan((4, 6), jnp.float32, BILEVEL, method="fused_bilevel")
+            # generated kernel ineligible off-TPU without interpret
+            plan.make_plan((4, 6), jnp.float32, BILEVEL, method="codegen")
         p = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
         with pytest.raises(ValueError, match="built for shape"):
             p(jnp.zeros((4, 7)), 1.0)
@@ -171,17 +171,26 @@ class TestAutoThreading:
         assert plan.best_l1_method(512) in ball.available_methods()
 
 
-class TestFusedBackendPlans:
-    def test_fused_trilevel_via_plan(self):
+class TestCodegenBackendPlans:
+    """The generated-kernel backend through the planner; the full equality
+    matrix lives in tests/test_codegen.py."""
+
+    def test_codegen_trilevel_via_plan(self):
         y = _rand((3, 17, 130), seed=10)
         p = plan.make_plan((3, 17, 130), jnp.float32, TRILEVEL,
-                           method="fused_trilevel", interpret=True)
+                           method="codegen", interpret=True)
         want = multilevel.trilevel_l1infinf(y, 1.0, method="bisect")
         np.testing.assert_allclose(p(y, 1.0), want, atol=1e-5)
 
-    def test_fused_bilevel_via_plan(self):
+    def test_codegen_bilevel_via_plan(self):
         y = _rand((16, 130), seed=11)
         p = plan.make_plan((16, 130), jnp.float32, BILEVEL,
-                           method="fused_bilevel", interpret=True)
+                           method="codegen", interpret=True)
         want = bilevel.bilevel_l1inf(y, 1.0, method="bisect")
         np.testing.assert_allclose(p(y, 1.0), want, atol=1e-5)
+
+    def test_hand_written_backends_demoted(self):
+        # the golden kernels no longer compete as planner backends
+        with pytest.raises(ValueError, match="unknown projection backend"):
+            plan.make_plan((16, 130), jnp.float32, BILEVEL,
+                           method="fused_bilevel", interpret=True)
