@@ -1,0 +1,262 @@
+"""Serving-tier latency benchmark: continuous batching vs bucket-and-wait.
+
+Replays ONE seeded open-loop arrival trace (Poisson interarrivals, a mixed
+population of plan keys) against both serving implementations:
+
+* ``flush`` baseline — :class:`ProjectionService` driven by the classic
+  bucket-and-wait policy: flush when the queue reaches the bucket size or
+  the oldest pending request exceeds the age timeout;
+* ``engine`` — :class:`ProjectionEngine` (continuous batching, donation,
+  warm pool), same planner backend, same trace.
+
+Per-request latency is arrival → result available to the client (flush
+return for the baseline; a collector thread claiming results in submission
+order for the engine, which if anything *over*-states engine latency).
+Reported: p50/p99 latency (µs) and sustained QPS. The committed artifact
+``benchmarks/results/BENCH_serving_latency.json`` pins the p99 ratio
+(engine/flush); CI's serving job re-runs the smoke trace and gates the
+fresh ratio at ≤1.25× the committed one (DESIGN.md §5 derives why the
+ratio, not the absolute p99, is the stable quantity on shared runners).
+
+Also benchmarks the batched-grid serving lowering against the vmap-lifted
+per-item kernel on several serving buckets (both interpret-mode Pallas, CPU).
+This is the honest form of the kernel-pool comparison: ``method="auto"``
+measures interpret-mode kernels orders of magnitude slower than the jnp
+backends on CPU, so the batched-grid kernel can only win auto *within the
+kernel pool* — the ``auto_winner`` field records that shootout.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .projections import _time
+
+BILEVEL = (("inf", 1), ("1", 1))
+
+# the trace's plan-key population: (shape, levels, weight) — one hot key,
+# one warm, one cold-ish, mirroring mixed production traffic
+_KEYS = (
+    ((32, 64), BILEVEL, 0.6),
+    ((16, 24), (("1", 2),), 0.3),
+    ((8, 16), BILEVEL, 0.1),
+)
+
+
+def make_trace(n: int, rate_hz: float, seed: int = 0):
+    """Seeded open-loop trace: [(arrival_s, key_idx, payload, radius)]."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    weights = np.asarray([w for _, _, w in _KEYS])
+    kidx = rng.choice(len(_KEYS), size=n, p=weights / weights.sum())
+    out = []
+    for t, k in zip(arrivals, kidx):
+        shape = _KEYS[k][0]
+        out.append((float(t), int(k),
+                    rng.normal(size=shape).astype(np.float32),
+                    float(rng.uniform(0.5, 4.0))))
+    return out
+
+
+def _percentiles(lat_s):
+    lat_us = np.asarray(lat_s) * 1e6
+    return float(np.percentile(lat_us, 50)), float(np.percentile(lat_us, 99))
+
+
+def _warm_executables(method, max_batch=16):
+    """Trace + compile every executable either replay can dispatch through
+    (each key, each pow-2 bucket, donated and plain, batch and scalar), so
+    the timed open-loop passes measure steady-state serving, not compiles —
+    one mid-replay compile would otherwise delay the whole backlog."""
+    from repro.core import plan as planmod
+
+    rng = np.random.default_rng(42)
+    for shape, levels, _ in _KEYS:
+        pb = planmod.make_plan(shape, jnp.float32, list(levels),
+                               radius_kind="batch", method=method)
+        b = 1
+        while b <= max_batch:
+            # the exact op-by-op pattern ProjectionService.flush executes:
+            # stack b payloads + b radii, batch plan, slice b results out —
+            # the stack/slice ops compile per bucket size too
+            items = [jnp.asarray(rng.normal(size=shape), jnp.float32)
+                     for _ in range(b)]
+            radii = [jnp.asarray(1.0, jnp.float32) for _ in range(b)]
+            out = pb(jnp.stack(items), jnp.stack(radii))
+            jax.block_until_ready([out[i] for i in range(b)])
+            b *= 2
+        ps = planmod.make_plan(shape, jnp.float32, list(levels),
+                               method=method)
+        y = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        jax.block_until_ready(ps(y, jnp.float32(1.0)))
+
+
+def _replay_flush(trace, method, bucket=8, max_age_s=0.008):
+    """Bucket-and-wait: flush at queue depth >= bucket or oldest pending
+    older than max_age_s (the pre-engine serving policy). Latency runs from
+    the request's SCHEDULED arrival — when the single-threaded driver falls
+    behind (it blocks in flush), that queueing delay is real latency."""
+    from repro.serving import ProjectionService
+
+    svc = ProjectionService(method=method)
+    arrival = {}
+    pending = []
+    lat = []
+
+    def flush_now():
+        svc.flush()
+        done = time.perf_counter()
+        for tk in pending:
+            jax.block_until_ready(svc.result(tk))
+            lat.append(done - arrival[tk])
+        pending.clear()
+
+    t0 = time.perf_counter()
+    oldest = None
+    for t_arr, k, payload, radius in trace:
+        now = time.perf_counter()
+        if t0 + t_arr > now:
+            time.sleep(t0 + t_arr - now)
+        shape, levels, _ = _KEYS[k]
+        tk = svc.submit(jnp.asarray(payload), list(levels), radius)
+        arrival[tk] = t0 + t_arr
+        pending.append(tk)
+        oldest = oldest if oldest is not None else time.perf_counter()
+        if len(pending) >= bucket or \
+                time.perf_counter() - oldest > max_age_s:
+            flush_now()
+            oldest = None
+    if pending:
+        flush_now()
+    wall = time.perf_counter() - t0
+    return lat, wall
+
+
+def _replay_engine(trace, method, max_batch=16):
+    """Continuous batching: submit on arrival, a collector thread claims
+    results in submission order (claim timestamps — conservative). Latency
+    runs from the request's scheduled arrival, same as the baseline."""
+    from repro.serving import ProjectionEngine
+
+    lat = []
+    tickets: "queue.Queue" = queue.Queue()
+
+    with ProjectionEngine(method=method, max_batch=max_batch,
+                          warm_buckets=8) as eng:
+        # warm pool traces every pow-2 dispatch path per key up front —
+        # the SLO story: cold shapes pay their compiles off the hot path
+        for shape, levels, _ in _KEYS:
+            eng.prewarm(shape, jnp.float32, list(levels))
+        eng.wait_warm(timeout=300.0)
+
+        def collect():
+            while True:
+                item = tickets.get()
+                if item is None:
+                    return
+                tk, t_sched = item
+                jax.block_until_ready(eng.result(tk, timeout=120.0))
+                lat.append(time.perf_counter() - t_sched)
+
+        th = threading.Thread(target=collect)
+        th.start()
+        t0 = time.perf_counter()
+        for t_arr, k, payload, radius in trace:
+            now = time.perf_counter()
+            if t0 + t_arr > now:
+                time.sleep(t0 + t_arr - now)
+            shape, levels, _ = _KEYS[k]
+            tk = eng.submit(jnp.asarray(payload), list(levels), radius)
+            tickets.put((tk, t0 + t_arr))
+        tickets.put(None)
+        th.join()
+        wall = time.perf_counter() - t0
+    return lat, wall
+
+
+def _kernel_bucket_shootout(interpret=True):
+    """Batched-grid generated kernel vs the vmap-lifted per-item kernel on
+    a few serving buckets. One CSV row per bucket — the lowerings trade
+    blows (the batch grid wins where it collapses the bucket to one or two
+    Pallas dispatches, vmap wins on deep multi-stage designs), so every
+    bucket is reported rather than cherry-picking one. Timing is the min of
+    three interleaved median-of-9 trials: container CPU contention only
+    inflates a trial, so the min is the stable estimator."""
+    from repro.kernels import codegen
+
+    rng = np.random.default_rng(7)
+    rows = []
+    for tag, shape, levels, b in (
+            ("64_flat_l1", (64,), (("1", 1),), 16),
+            ("16x24_l12", (16, 24), (("1", 2),), 8),
+            ("32x64_bilevel", (32, 64), BILEVEL, 16)):
+        ys = jnp.asarray(rng.normal(size=(b,) + shape), jnp.float32)
+        radii = jnp.asarray(rng.uniform(0.5, 2.0, size=b), jnp.float32)
+        batched = codegen.build_batched(shape, levels, jnp.float32,
+                                        interpret=interpret, jit=True)
+        per_item = codegen.build(shape, levels, jnp.float32,
+                                 interpret=interpret)
+        vmapped = jax.jit(jax.vmap(per_item, in_axes=(0, 0)))
+        np.testing.assert_allclose(batched(ys, radii), vmapped(ys, radii),
+                                   atol=1e-4)
+        t_batched = min(_time(batched, ys, radii, reps=9, warmup=2)
+                        for _ in range(3))
+        t_vmap = min(_time(vmapped, ys, radii, reps=9, warmup=2)
+                     for _ in range(3))
+        winner = "codegen_batch" if t_batched <= t_vmap else "codegen_vmap"
+        rows.append(
+            (f"serving_kernel_{tag}_b{b}", t_batched,
+             f"vmap_us={t_vmap:.1f},ratio={t_batched / t_vmap:.3f},"
+             f"auto_winner={winner}"))
+    return rows
+
+
+def serving_sweep(full=False):
+    """The ``serving`` benchmark section (BENCH_serving_latency.json)."""
+    # rate sits well below both policies' service capacity (~2.1k QPS for
+    # the flush driver, ~2.6k for the engine on the container), so measured
+    # latency reflects the serving POLICY — bucket-and-wait holds requests
+    # until depth 8 or the 8 ms age timeout, continuous batching dispatches
+    # on arrival — rather than saturation collapse, which is dominated by
+    # container CPU contention and unstable run to run.
+    n, rate = (900, 1200.0) if full else (300, 1200.0)
+    method = "bisect"  # same planner backend for both sides: the comparison
+    #                    isolates the serving policy, not the kernel choice
+    trace = make_trace(n, rate, seed=0)
+
+    # compile everything up front, then one short untimed shakeout pass per
+    # side — the timed pass measures steady-state serving policy only
+    _warm_executables(method)
+    _replay_flush(trace[: max(30, n // 5)], method)
+    _replay_engine(trace[: max(30, n // 5)], method)
+
+    # best-of-3 timed replays per side, interleaved: container CPU
+    # contention only ever inflates latency, so the min-p99 replay is the
+    # stable estimator (and interleaving decorrelates slow spells)
+    runs_f, runs_e = [], []
+    for _ in range(3):
+        runs_f.append(_replay_flush(trace, method))
+        runs_e.append(_replay_engine(trace, method))
+    lat_f, wall_f = min(runs_f, key=lambda r: _percentiles(r[0])[1])
+    lat_e, wall_e = min(runs_e, key=lambda r: _percentiles(r[0])[1])
+    p50_f, p99_f = _percentiles(lat_f)
+    p50_e, p99_e = _percentiles(lat_e)
+    ratio = p99_e / p99_f
+    rows = [
+        ("serving_trace_flush_p50", p50_f,
+         f"p99_us={p99_f:.0f},qps={len(lat_f) / wall_f:.0f},n={n},"
+         f"policy=bucket8_age8ms"),
+        ("serving_trace_engine_p50", p50_e,
+         f"p99_us={p99_e:.0f},qps={len(lat_e) / wall_e:.0f},n={n},"
+         f"policy=continuous"),
+        ("serving_trace_p99_engine_vs_flush", p99_e,
+         f"flush_p99_us={p99_f:.0f},ratio={ratio:.3f}"),
+    ]
+    rows.extend(_kernel_bucket_shootout())
+    return rows

@@ -1,5 +1,5 @@
 """End-to-end serving driver: build a small dense LM, run BATCHED requests
-through prefill-free greedy decode (the serving engine), and report
+through prefill-free greedy decode (``repro.serving.lm``), and report
 tokens/s. This is the e2e ``serve a small model with batched requests``
 deliverable (runs in ~1 min on the CPU container).
 
@@ -19,7 +19,7 @@ import numpy as np
 from repro import models
 from repro.configs import registry
 from repro.models import params as PM
-from repro.serving import engine
+from repro.serving import lm
 
 
 def main():
@@ -39,7 +39,7 @@ def main():
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
     t0 = time.perf_counter()
-    out = engine.generate(params, cfg, prompts, max_new=args.new)
+    out = lm.generate(params, cfg, prompts, max_new=args.new)
     out.block_until_ready()
     dt = time.perf_counter() - t0
     toks = args.batch * (args.prompt_len + args.new)

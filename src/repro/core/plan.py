@@ -90,12 +90,18 @@ class PlanBackend(NamedTuple):
 
     ``available(key)`` gates shape/levels/device eligibility; ``build(key)``
     returns the raw ``(y, radius) -> x`` callable (the planner jits it).
+    ``batch_native=True`` marks a backend whose built callable already takes
+    the stacked ``(ys, radii)`` serving-bucket shape (the batch axis lives in
+    its Pallas grid): the planner jits it as-is for ``radius_kind="batch"``
+    keys instead of vmap-lifting a per-item callable, and never offers it for
+    scalar-radius keys.
     """
 
     name: str
     available: Callable[[PlanKey], bool]
     build: Callable[[PlanKey], Callable]
     description: str = ""
+    batch_native: bool = False
 
 
 class _Executable(NamedTuple):
@@ -208,11 +214,27 @@ def _maybe_register_kernel_backends() -> None:
         pass
 
 
+def _backend_available(backend: PlanBackend, key: PlanKey) -> bool:
+    """Availability incl. the batch-native gate (batch-native backends take
+    the stacked bucket shape, so they only fit ``radius_kind="batch"`` keys)."""
+    if backend.batch_native and key.radius_kind != "batch":
+        return False
+    return backend.available(key)
+
+
+def is_batch_native(name: str) -> bool:
+    """True when ``name`` is a registered batch-native specialized backend
+    (its executables take stacked ``(ys, radii)`` buckets only — a serving
+    group routed to it must dispatch through a batch plan even for size 1)."""
+    backend = _SPECIALIZED.get(name)
+    return backend is not None and backend.batch_native
+
+
 def _build_backend_fn(key: PlanKey, name: str) -> Callable:
     """Raw (y, radius) -> x callable for one backend on one key."""
     if name in _SPECIALIZED:
         backend = _SPECIALIZED[name]
-        if not backend.available(key):
+        if not _backend_available(backend, key):
             raise ValueError(
                 f"backend {name!r} is not available for plan key {key}")
         return backend.build(key)
@@ -225,8 +247,8 @@ def _build_backend_fn(key: PlanKey, name: str) -> Callable:
     return fn
 
 
-def _get_executable(key: PlanKey, name: str) -> _Executable:
-    ek = (key, name)
+def _get_executable(key: PlanKey, name: str, donate: bool = False) -> _Executable:
+    ek = (key, name, donate)
     if ek in _EXECS:
         return _EXECS[ek]
     base = _build_backend_fn(key, name)
@@ -236,10 +258,15 @@ def _get_executable(key: PlanKey, name: str) -> _Executable:
         traces[0] += 1  # python side effect: runs at trace time only
         return base(y, radius)
 
-    if key.radius_kind == "batch":
-        fn = jax.jit(jax.vmap(counted, in_axes=(0, 0)))
+    # a batch-native backend already takes the stacked (ys, radii) bucket —
+    # jit it as-is; everything else vmap-lifts the per-item callable
+    if key.radius_kind == "batch" and not is_batch_native(name):
+        body = jax.vmap(counted, in_axes=(0, 0))
     else:
-        fn = jax.jit(counted)
+        body = counted
+    # donate=True consumes the payload buffer in place (serving: the request
+    # tensor — or the stacked bucket — is dead after projection anyway)
+    fn = jax.jit(body, donate_argnums=(0,) if donate else ())
     ex = _Executable(fn, traces)
     _EXECS[ek] = ex
     return ex
@@ -257,7 +284,8 @@ def _candidates(key: PlanKey) -> List[str]:
         # no l1 level anywhere -> the θ-solver is never invoked; one generic
         # executable is enough
         names = [ball.DEFAULT_METHOD]
-    names += [b.name for b in _SPECIALIZED.values() if b.available(key)]
+    names += [b.name for b in _SPECIALIZED.values()
+              if _backend_available(b, key)]
     return names
 
 
@@ -307,11 +335,11 @@ def _autotune(key: PlanKey) -> Tuple[str, Dict[str, float]]:
 
 def _canonical_backend_name(key: PlanKey, method: str) -> str:
     if method in _SPECIALIZED:
-        if not _SPECIALIZED[method].available(key):
+        if not _backend_available(_SPECIALIZED[method], key):
             raise ValueError(
                 f"backend {method!r} is not available for shape={key.shape} "
-                f"levels={key.levels} on device={key.device!r} "
-                f"(interpret={key.interpret})")
+                f"levels={key.levels} radius_kind={key.radius_kind!r} on "
+                f"device={key.device!r} (interpret={key.interpret})")
         return method
     try:
         return ball.resolve_method(method)
@@ -336,6 +364,7 @@ class ProjectionPlan:
     requested: str                           # what the caller asked for
     timings_us: Optional[Dict[str, float]]   # autotune results (auto only)
     _exec: _Executable
+    donate: bool = False                     # executable consumes the payload
 
     def __call__(self, y, radius=1.0):
         y = jnp.asarray(y)
@@ -363,7 +392,8 @@ class ProjectionPlan:
 
 def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
               method: str = AUTO, *, interpret: bool = False,
-              device: str | None = None, sharding=None) -> ProjectionPlan:
+              device: str | None = None, sharding=None,
+              donate: bool = False) -> ProjectionPlan:
     """Build (or fetch from cache) the projection plan for one workload.
 
     ``shape``/``dtype`` describe one tensor to project (for
@@ -381,6 +411,12 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
     as the ``"sharded"`` backend and the generic candidates are timed on the
     committed sharded input (i.e. as GSPMD gather-and-project), so the
     autotune verdict is schedule-vs-gather by measurement.
+
+    ``donate=True`` jits the executable with ``donate_argnums=(0,)``: the
+    payload buffer (the tensor, or the stacked bucket for
+    ``radius_kind="batch"``) is consumed in place — the serving engine's
+    no-copy path. Donating and non-donating plans share the autotune verdict
+    but hold separate executables; callers must not reuse a donated input.
     """
     _maybe_register_kernel_backends()
     shape = tuple(int(s) for s in shape)
@@ -394,7 +430,7 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
         device = jax.devices()[0].platform
     key = PlanKey(shape, dtype.name, lv, radius_kind, device, bool(interpret),
                   canonical_sharding(sharding, len(shape)))
-    cache_key = (key, method)
+    cache_key = (key, method, donate)
     if cache_key in _PLANS:
         return _PLANS[cache_key]
     timings: Optional[Dict[str, float]] = None
@@ -407,21 +443,25 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
     else:
         chosen = _canonical_backend_name(key, method)
     plan = ProjectionPlan(key=key, method=chosen, requested=method,
-                          timings_us=timings, _exec=_get_executable(key, chosen))
+                          timings_us=timings,
+                          _exec=_get_executable(key, chosen, donate),
+                          donate=donate)
     _PLANS[cache_key] = plan
     return plan
 
 
 def validate_backend(shape, dtype, levels, method: str, *,
-                     device: str | None = None,
-                     interpret: bool = False, sharding=None) -> str:
+                     device: str | None = None, interpret: bool = False,
+                     sharding=None, radius_kind: str = "scalar") -> str:
     """Canonicalize + validate a backend name for a workload, without
     building (or autotuning) a plan.
 
     Returns the canonical name (aliases fold, ``"auto"`` passes through);
     raises ``ValueError`` for an unknown backend or a specialized backend
-    that is not available for this (shape, levels, device). Cheap enough for
-    a request-admission path — the serving service calls it per submit.
+    that is not available for this (shape, levels, device, radius_kind).
+    Cheap enough for a request-admission path — the serving tier calls it
+    per submit (with ``radius_kind="batch"`` for unsharded traffic, since
+    groups execute as stacked buckets).
     """
     _maybe_register_kernel_backends()
     if method == AUTO:
@@ -429,8 +469,8 @@ def validate_backend(shape, dtype, levels, method: str, *,
     if device is None:
         device = jax.devices()[0].platform
     key = PlanKey(tuple(int(s) for s in shape), np.dtype(dtype).name,
-                  canonical_levels(levels), "scalar", device, bool(interpret),
-                  canonical_sharding(sharding, len(shape)))
+                  canonical_levels(levels), radius_kind, device,
+                  bool(interpret), canonical_sharding(sharding, len(shape)))
     return _canonical_backend_name(key, method)
 
 

@@ -27,8 +27,9 @@ import numpy as np
 from repro.core.schedule import compile_schedule, canonical_levels
 
 from . import lowering, tiling  # noqa: F401
-from .lowering import generate  # noqa: F401
-from .tiling import TilePlan, plan_tiles  # noqa: F401
+from .lowering import generate, generate_batched  # noqa: F401
+from .tiling import (BatchedTilePlan, TilePlan,  # noqa: F401
+                     plan_batched_tiles, plan_tiles)
 
 
 def supported(shape, levels, dtype) -> bool:
@@ -57,6 +58,26 @@ def build(shape, levels, dtype, *, method: str = "bisect",
     return _cached_build(tuple(int(s) for s in shape),
                          canonical_levels(levels), np.dtype(dtype).name,
                          method, bool(interpret), bool(jit))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_build_batched(shape, levels, dtype_name: str, method: str,
+                          interpret: bool, jit: bool) -> Callable:
+    sched = compile_schedule(shape, levels)
+    fn = lowering.generate_batched(sched, np.dtype(dtype_name), method=method,
+                                   interpret=interpret)
+    return jax.jit(fn) if jit else fn
+
+
+def build_batched(shape, levels, dtype, *, method: str = "bisect",
+                  interpret: bool = False, jit: bool = False) -> Callable:
+    """Generate (or fetch from cache) the batched-grid ``(ys, radii) -> xs``
+    kernel for a serving bucket of ``shape``-shaped items (the stacked batch
+    axis joins the Pallas grid; see :func:`lowering.generate_batched`)."""
+    return _cached_build_batched(tuple(int(s) for s in shape),
+                                 canonical_levels(levels),
+                                 np.dtype(dtype).name, method,
+                                 bool(interpret), bool(jit))
 
 
 def codegen_project(y: jax.Array, levels: Sequence, radius, *,

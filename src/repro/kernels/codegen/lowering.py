@@ -24,6 +24,12 @@ golden kernels (``bilevel_l1inf.py`` / ``trilevel_l1infinf.py``) use, but for
 Reverse-mode: generated kernels carry a ``custom_vjp`` whose backward
 recomputes through the differentiable jnp schedule executor (exactly the
 ``sort`` oracle's Jacobian) — a fused backward kernel is a ROADMAP item.
+
+Serving buckets (B stacked items, per-item radii) lower through
+:func:`generate_batched` instead: the batch axis joins the Pallas grid as its
+leading parallel dimension and the per-item radii ride in SMEM for the
+θ-solve stage (DESIGN.md §5) — one dispatch per pipeline stage for the whole
+bucket, versus one vmap-lifted kernel per stage per item.
 """
 
 from __future__ import annotations
@@ -191,15 +197,45 @@ def _reduce_call(y: jax.Array, tp: TilePlan, norms: Sequence[str],
 # --------------------------------------------------------------------------- #
 
 
+def _apply_tile(norms: Sequence[str], stages, vfin, u):
+    """The backward sweep on one resident tile (pure array form).
+
+    ``stages`` are ``[y_tile, v_1, …, v_{L-2}]``; ``u`` the solved-aggregate
+    row; ``vfin`` the saved global final aggregate (ℓ2 last reduce only). The
+    radii chain ``w`` starts at the solved aggregate and walks levels L-1 → 1;
+    every stage input it needs is a saved forward aggregate already resident
+    in the tile. Shared by the single-item and batched-grid apply kernels.
+    """
+    L = len(norms) + 1
+    # level L-1: its group runs along the sublane axis of the 2-D tile
+    x, q, w = stages[-1], norms[-1], u
+    if q == "inf":
+        w = jnp.clip(x, -w, w)
+    elif q == "2":
+        scale = jnp.where(vfin > w, w / jnp.maximum(vfin, 1e-30), 1.0)
+        w = x * scale
+    else:  # "1" — tiling pinned the whole group axis into this block
+        w = _grouped_l1_tile(x, w)
+    # levels L-2 … 1: group axis = the leading resident axis of each
+    # stage input; radii/aggregates live one stage up (w's shape)
+    for lvl in range(L - 2, 0, -1):
+        x, agg, q = stages[lvl - 1], stages[lvl], norms[lvl - 1]
+        if q == "inf":
+            w = jnp.clip(x, -w[None], w[None])
+        elif q == "2":
+            scale = jnp.where(agg > w, w / jnp.maximum(agg, 1e-30), 1.0)
+            w = x * scale[None]
+        else:
+            w = _grouped_l1_tile(x, w[None])
+    return w
+
+
 def _make_apply_kernel(norms: Sequence[str]):
     """Kernel body: the backward sweep fused into one elementwise pass.
 
     Inputs: ``y, v_1, …, v_{L-2}, [v_final_row,] u_row``; output: the
     projected tile (the final-aggregate row rides along only for an ℓ2 last
-    reduce level, whose rescale needs the saved *global* norm). The radii
-    chain ``w`` starts at the solved aggregate and walks levels L-1 → 1;
-    every stage input it needs is a saved forward aggregate already resident
-    in the tile.
+    reduce level, whose rescale needs the saved *global* norm).
     """
     L = len(norms) + 1
     has_vfin = norms[-1] == "2"
@@ -209,28 +245,8 @@ def _make_apply_kernel(norms: Sequence[str]):
         vfin_ref = refs[L - 1] if has_vfin else None
         u_ref, out_ref = refs[-2], refs[-1]
         stages = [y_ref[...]] + [v[...] for v in v_refs]  # s_0 … s_{L-2}
-        # level L-1: its group runs along the sublane axis of the 2-D tile
-        x, q, w = stages[-1], norms[-1], u_ref[...]
-        if q == "inf":
-            w = jnp.clip(x, -w, w)
-        elif q == "2":
-            vfin = vfin_ref[...]
-            scale = jnp.where(vfin > w, w / jnp.maximum(vfin, 1e-30), 1.0)
-            w = x * scale
-        else:  # "1" — tiling pinned the whole group axis into this block
-            w = _grouped_l1_tile(x, w)
-        # levels L-2 … 1: group axis = the leading resident axis of each
-        # stage input; radii/aggregates live one stage up (w's shape)
-        for lvl in range(L - 2, 0, -1):
-            x, agg, q = stages[lvl - 1], stages[lvl], norms[lvl - 1]
-            if q == "inf":
-                w = jnp.clip(x, -w[None], w[None])
-            elif q == "2":
-                scale = jnp.where(agg > w, w / jnp.maximum(agg, 1e-30), 1.0)
-                w = x * scale[None]
-            else:
-                w = _grouped_l1_tile(x, w[None])
-        out_ref[...] = w
+        vfin = vfin_ref[...] if has_vfin else None
+        out_ref[...] = _apply_tile(norms, stages, vfin, u_ref[...])
 
     return kernel
 
@@ -330,5 +346,221 @@ def generate(sched: Schedule, dtype, *, method: str = "bisect",
     def entry(y, radius):
         y = jnp.asarray(y)
         return fused(y, jnp.asarray(radius, y.dtype))
+
+    return entry
+
+
+# --------------------------------------------------------------------------- #
+# Batched-grid lowering (serving buckets)
+# --------------------------------------------------------------------------- #
+#
+# A serving bucket is B stacked instances of ONE schedule with per-item radii.
+# Items share no aggregates, so the batch axis never enters the schedule — it
+# becomes the LEADING (parallel) Pallas grid dimension instead of a vmap
+# around the batch-free kernel: one dispatch walks B × grid(base) programs,
+# per-item rows/radii are block-sliced by the batch grid index (radii ride in
+# SMEM for the θ-solve stage), and per-step VMEM residency stays the per-item
+# plan's.
+
+
+def _y_spec_batched(tp: TilePlan):
+    k = len(tp.lead)
+    return pl.BlockSpec((1,) + tp.lead + (tp.block_n, tp.block_m),
+                        lambda b, j, i, k=k: (b,) + (0,) * k + (i, j))
+
+
+def _agg_specs_shapes_batched(tp: TilePlan, dtype, batch: int):
+    specs, shapes = [], []
+    for t in range(1, len(tp.lead) + 1):
+        ld = tp.lead[t:]
+        specs.append(pl.BlockSpec(
+            (1,) + ld + (tp.block_n, tp.block_m),
+            lambda b, j, i, k=len(ld): (b,) + (0,) * k + (i, j)))
+        shapes.append(jax.ShapeDtypeStruct((batch,) + ld + (tp.n, tp.m), dtype))
+    return specs, shapes
+
+
+def _row_spec_batched(tp: TilePlan):
+    return pl.BlockSpec((1, 1, tp.block_m), lambda b, j, i: (b, 0, j))
+
+
+def _make_batched_reduce_kernel(norms: Sequence[str], n_total: int,
+                                block_n: int):
+    """The reduce mega-kernel with the batch axis as grid dimension 0.
+
+    Identical per-item math to :func:`_make_reduce_kernel`; every block gains
+    a leading size-1 batch axis (squeezed on read, restored on write) and the
+    sequential row-block index moves to ``program_id(2)``.
+    """
+    inter, last = tuple(norms[:-1]), norms[-1]
+
+    def kernel(y_ref, *out_refs):
+        i = pl.program_id(2)  # sequential row-block index (last grid axis)
+        cur = jnp.abs(y_ref[...])[0]
+        for t, q in enumerate(inter):
+            cur = MONOIDS[q].tile(cur, 0)
+            out_refs[t][...] = cur[None]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 0) \
+            + i * block_n
+        cur = jnp.where(row_ids < n_total, cur, 0.0)
+        part = MONOIDS[last].part(cur, 0)[None]          # (1, block_m)
+        acc_ref = out_refs[-1]
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = part[None]
+
+        @pl.when(i > 0)
+        def _acc():
+            acc_ref[...] = MONOIDS[last].combine(acc_ref[...], part[None])
+
+    return kernel
+
+
+def _reduce_call_batched(y: jax.Array, tp: TilePlan, norms: Sequence[str],
+                         interpret: bool):
+    batch = y.shape[0]
+    grid = (batch, pl.cdiv(tp.m, tp.block_m), pl.cdiv(tp.n, tp.block_n))
+    agg_specs, agg_shapes = _agg_specs_shapes_batched(tp, y.dtype, batch)
+    outs = pl.pallas_call(
+        _make_batched_reduce_kernel(norms, n_total=tp.n, block_n=tp.block_n),
+        grid=grid,
+        in_specs=[_y_spec_batched(tp)],
+        out_specs=agg_specs + [_row_spec_batched(tp)],
+        out_shape=agg_shapes
+        + [jax.ShapeDtypeStruct((batch, 1, tp.m), y.dtype)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(y)
+    return list(outs[:-1]), outs[-1][:, 0]  # ([v_1, …], raw acc (B, m))
+
+
+def _make_batched_apply_kernel(norms: Sequence[str]):
+    """The apply epilogue with the batch axis as grid dimension 0."""
+    L = len(norms) + 1
+    has_vfin = norms[-1] == "2"
+
+    def kernel(*refs):
+        y_ref, v_refs = refs[0], refs[1:L - 1]
+        vfin_ref = refs[L - 1] if has_vfin else None
+        u_ref, out_ref = refs[-2], refs[-1]
+        stages = [y_ref[...][0]] + [v[...][0] for v in v_refs]
+        vfin = vfin_ref[...][0] if has_vfin else None
+        out_ref[...] = _apply_tile(norms, stages, vfin, u_ref[...][0])[None]
+
+    return kernel
+
+
+def _apply_call_batched(y: jax.Array, aggs, vfin: jax.Array, u: jax.Array,
+                        tp: TilePlan, norms: Sequence[str], interpret: bool):
+    batch = y.shape[0]
+    grid = (batch, pl.cdiv(tp.m, tp.block_m), pl.cdiv(tp.n, tp.block_n))
+    agg_specs, _ = _agg_specs_shapes_batched(tp, y.dtype, batch)
+    row = lambda v: v.reshape(batch, 1, tp.m).astype(y.dtype)  # noqa: E731
+    rows = ([row(vfin)] if norms[-1] == "2" else []) + [row(u)]
+    return pl.pallas_call(
+        _make_batched_apply_kernel(norms),
+        grid=grid,
+        in_specs=[_y_spec_batched(tp)] + agg_specs
+                 + [_row_spec_batched(tp)] * len(rows),
+        out_specs=_y_spec_batched(tp),
+        out_shape=jax.ShapeDtypeStruct((batch,) + tp.canon_shape, y.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(y, *aggs, *rows)
+
+
+def _solve_outer_batched(v: jax.Array, norm: str, radii: jax.Array,
+                         method: str, interpret: bool) -> jax.Array:
+    """Per-item outer solves on the (B, m) finalized aggregates.
+
+    The ℓ1 case runs the batched single-block θ kernel (batch in the grid,
+    per-item radii in SMEM); ℓ2/ℓ∞ are a batched rescale/clip.
+    """
+    radii = jnp.asarray(radii, v.dtype)
+    if norm == "1":
+        from ..l1ball import L1_KERNEL_MAX, project_l1_pallas_batched
+
+        resolved = ball.resolve_method(method)
+        if v.shape[-1] <= L1_KERNEL_MAX and resolved in ("bisect", "filter"):
+            return project_l1_pallas_batched(v, radii, method=resolved,
+                                             interpret=interpret)
+        return jax.vmap(
+            lambda vv, rr: ball.project_l1(vv, rr, method=method))(v, radii)
+    if norm == "2":
+        return jax.vmap(ball.project_l2)(v, radii)
+    return jnp.minimum(v, radii[:, None])  # ℓ∞ on v ≥ 0
+
+
+def generate_batched(sched: Schedule, dtype, *, method: str = "bisect",
+                     interpret: bool = False) -> Callable:
+    """Compile ``sched`` into a fused batched ``(ys, radii) -> xs`` callable.
+
+    ``ys`` stacks B instances of ``sched.shape`` along a leading axis with a
+    per-item ``radii`` vector of length B — the serving-bucket execution
+    shape. Unlike :func:`generate` (whose plan backend is vmapped by the
+    planner for ``radius_kind="batch"`` keys), the batch axis here IS a Pallas
+    grid dimension, so the whole bucket is one reduce dispatch + one θ-solve
+    dispatch + one apply dispatch. B is read from ``ys`` at trace time (each
+    new bucket size traces once — serving pads to pow-2 buckets).
+    """
+    if sched.batch_dims:
+        raise ValueError(
+            "generate_batched takes a batch-free schedule; the stacked "
+            "serving axis is the callable's leading axis, not a schedule "
+            "batch dim")
+    tp = plan_tiles(sched, dtype)
+    if tp is None:
+        raise ValueError(
+            f"codegen cannot lower levels={sched.levels} on shape="
+            f"{sched.shape}: no VMEM-resident tiling (or flat non-l1 solve)")
+    norms = [q for q, _ in sched.levels]
+
+    def raw(ys, radii):
+        batch = ys.shape[0]
+        yc = ys.reshape((batch,) + tp.canon_shape)
+        if len(norms) == 1:
+            out = _solve_outer_batched(yc, norms[0], radii, method, interpret)
+            return out.reshape(ys.shape)
+        aggs, acc = _reduce_call_batched(yc, tp, norms[:-1], interpret)
+        vfin = MONOIDS[norms[-2]].finalize(acc)
+        u = _solve_outer_batched(vfin, norms[-1], radii, method, interpret)
+        x = _apply_call_batched(yc, aggs, vfin, u, tp, norms[:-1], interpret)
+        return x.reshape(ys.shape)
+
+    @jax.custom_vjp
+    def fused(ys, radii):
+        return raw(ys, radii)
+
+    def fwd(ys, radii):
+        return raw(ys, radii), (ys, radii)
+
+    def bwd(res, g):
+        ys, radii = res
+        _, vjp = jax.vjp(
+            lambda yy, rr: jax.vmap(
+                lambda y1, r1: sched_mod.execute(y1, sched, r1, method="sort")
+            )(yy, rr), ys, radii)
+        return vjp(g)
+
+    fused.defvjp(fwd, bwd)
+
+    @functools.wraps(fused)
+    def entry(ys, radii):
+        ys = jnp.asarray(ys)
+        radii = jnp.asarray(radii, ys.dtype)
+        if ys.ndim != len(sched.shape) + 1:
+            raise ValueError(
+                f"batched kernel built for item shape {sched.shape} expects "
+                f"rank {len(sched.shape) + 1} stacked input, got {ys.shape}")
+        if radii.ndim != 1 or radii.shape[0] != ys.shape[0]:
+            raise ValueError(
+                f"radii must be one scalar per stacked item: got "
+                f"{radii.shape} for batch {ys.shape[0]}")
+        return fused(ys, radii)
 
     return entry

@@ -83,6 +83,41 @@ def _tile_bytes(lead: Tuple[int, ...], block_n: int, block_m: int,
     return 2 * elems * itemsize
 
 
+class BatchedTilePlan(NamedTuple):
+    """Grid/block assignment for a serving bucket: ``batch`` stacked items.
+
+    ``base`` is the per-item :class:`TilePlan`; the generated batched kernels
+    prepend the batch extent as the LEADING (parallel) Pallas grid dimension,
+    so one dispatch walks ``batch × grid(base)`` programs with per-item radii
+    block-sliced from SMEM by the batch grid index. Per-grid-step VMEM
+    residency equals the per-item plan's (the batch block size is 1), so the
+    budget check is the base plan's check.
+    """
+
+    base: TilePlan
+    batch: int
+
+    @property
+    def grid_prefix(self) -> Tuple[int, ...]:
+        return (self.batch,)
+
+
+def plan_batched_tiles(sched: Schedule, dtype, batch: int) -> Optional[BatchedTilePlan]:
+    """Pick the batched-grid assignment for ``batch`` stacked instances of
+    ``sched``, or ``None`` when the per-item design cannot be generated.
+
+    ``sched`` is the batch-free per-item schedule (the serving plan's
+    ``key.shape``); the batch axis never enters the schedule because items do
+    not share aggregates — it is purely a grid dimension.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    base = plan_tiles(sched, dtype)
+    if base is None:
+        return None
+    return BatchedTilePlan(base, int(batch))
+
+
 def plan_tiles(sched: Schedule, dtype) -> Optional[TilePlan]:
     """Pick VMEM-resident block sizes for ``sched``, or ``None`` if the
     design cannot be generated (flat non-ℓ1 solve, or no fitting blocks)."""

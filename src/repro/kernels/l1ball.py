@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 _ITERS = 64
 _LANE = 128
 
@@ -147,3 +149,41 @@ def project_l1_pallas(v: jax.Array, radius, *, method: str = "bisect",
         interpret=interpret,
     )(v2, r)
     return out[0, :n]
+
+
+def project_l1_pallas_batched(v: jax.Array, radii: jax.Array, *,
+                              method: str = "bisect", iters: int | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """Project every row of ``v`` (B, n) onto its own ℓ1 ball, batched grid.
+
+    The serving-bucket form of :func:`project_l1_pallas`: the batch axis is a
+    PARALLEL Pallas grid dimension (one program per request) and the per-item
+    radii ride in SMEM, block-sliced by the batch grid index — the same kernel
+    bodies as the single-item version, no vmap lifting. Each program keeps its
+    whole (padded) row in VMEM, so the single-block size limit
+    (``L1_KERNEL_MAX``) applies per item, not to the batch.
+    """
+    if method not in _THRESHOLD_KERNELS:
+        raise ValueError(
+            f"no pallas threshold kernel for method {method!r}; "
+            f"available: {sorted(_THRESHOLD_KERNELS)}"
+        )
+    b, n = v.shape
+    if iters is None:
+        iters = n + 2 if method == "filter" else _ITERS
+    n_pad = max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE)
+    v2 = jnp.zeros((b, n_pad), v.dtype).at[:, :n].set(v)
+    r = jnp.asarray(radii, v.dtype).reshape(b)
+    out = pl.pallas_call(
+        functools.partial(_THRESHOLD_KERNELS[method], n_total=n, iters=iters),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), v.dtype),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(v2, r)
+    return out[:, :n]

@@ -1,13 +1,16 @@
 """Generated fused kernels as a projection-planner backend (DESIGN.md §2/§4).
 
-Importing this module registers the ``codegen`` backend with
-``repro.core.plan`` (the planner imports it lazily on first ``make_plan``, so
-``core`` never imports ``kernels`` at module load): the kernel code generator
-(``kernels/codegen``) lowers ANY unsharded norm design the tiler accepts to a
-fused reduce → θ-solve → apply kernel pipeline — eligible on TPU, or anywhere
-under ``interpret=True`` (correctness tests only; interpret mode is orders of
-magnitude slower than the jnp path, so ``method="auto"`` will never pick it
-off-TPU, by measurement).
+Importing this module registers the ``codegen`` and ``codegen_batch``
+backends with ``repro.core.plan`` (the planner imports it lazily on first
+``make_plan``, so ``core`` never imports ``kernels`` at module load): the
+kernel code generator (``kernels/codegen``) lowers ANY unsharded norm design
+the tiler accepts to a fused reduce → θ-solve → apply kernel pipeline —
+eligible on TPU, or anywhere under ``interpret=True`` (correctness tests
+only; interpret mode is orders of magnitude slower than the jnp path, so
+``method="auto"`` will never pick it off-TPU, by measurement).
+``codegen_batch`` is the serving-bucket variant: batch-native (the stacked
+batch axis joins the Pallas grid, per-item radii in SMEM), competing only on
+``radius_kind="batch"`` plan keys.
 
 The hand-written fused kernels (``bilevel_l1inf.py``/``trilevel_l1infinf.py``)
 are no longer registered as backends: they are the *golden references* the
@@ -45,4 +48,23 @@ planmod.register_plan_backend(planmod.PlanBackend(
     build=_build_codegen,
     description="generated fused Pallas kernels: one streaming reduce pass "
                 "-> VMEM theta-solve -> fused apply epilogue (kernels/codegen)",
+))
+
+
+def _build_codegen_batch(key: planmod.PlanKey):
+    return codegen.build_batched(key.shape, key.levels, key.dtype,
+                                 method=_OUTER_METHOD, interpret=key.interpret)
+
+
+planmod.register_plan_backend(planmod.PlanBackend(
+    name="codegen_batch",
+    # same eligibility as `codegen`; batch_native=True restricts it to
+    # radius_kind="batch" keys (the planner enforces the gate)
+    available=_codegen_available,
+    build=_build_codegen_batch,
+    description="batched-grid generated kernels for serving buckets: the "
+                "stacked batch axis joins the Pallas grid (per-item radii in "
+                "SMEM) instead of vmap-lifting the per-item kernel — one "
+                "dispatch per pipeline stage for the whole bucket",
+    batch_native=True,
 ))

@@ -1,4 +1,8 @@
-"""repro.serving — prefill/decode serve steps, batched request engine, and
-the plan-batched projection service."""
-from .engine import generate, make_decode_step, make_prefill  # noqa: F401
+"""repro.serving — the continuous-batching projection engine (async
+submit/poll, DESIGN.md §5), the legacy flush()-driven projection service,
+and LM prefill/decode serve steps."""
+from .engine import (DeadlineExceededError, ProjectionEngine,  # noqa: F401
+                     QueueFullError, ServingError, Ticket,
+                     UnknownTicketError)
+from .lm import generate, make_decode_step, make_prefill  # noqa: F401
 from .projection_service import ProjectionService  # noqa: F401

@@ -1,68 +1,615 @@
-"""Serving: batched prefill + single-token decode steps (the ``serve_step``
-lowered by the decode_* dry-run cells), plus a simple batched request engine
-used by examples/serve_lm.py.
+"""Continuous-batching projection engine: async submit/poll with latency SLOs.
 
-Decode semantics per family:
-  dense/moe/vlm : KV (or MLA latent) cache, seq sharded over 'model'
-  audio         : decoder self-cache + precomputed cross K/V
-  ssm / hybrid  : O(1) recurrent state
+The engine is the production serving tier over the projection planner
+(DESIGN.md §5). It replaces the bucket-and-wait flow of
+:class:`~repro.serving.projection_service.ProjectionService` — where a
+request waits until its group is explicitly ``flush()``-ed — with
+**continuous batching**: a background dispatcher pops *every* request
+pending for one plan key the moment that key's plan is ready, so a request
+joins the next in-flight dispatch for its key instead of waiting for a
+bucket to fill or a caller to flush.
+
+Four mechanisms make the latency profile (DESIGN.md §5 derives the model):
+
+* **continuous batching** — one dispatch serves everything that arrived for
+  a key since its last dispatch (popped group capped at ``max_batch``,
+  padded to the next power of two so varying traffic re-traces the batch
+  executable only O(log max_batch) times);
+* **buffer donation** — the engine takes ownership of every submitted
+  payload: each dispatch is one fused jitted call (stack → project →
+  unstack) that donates the request buffers at its boundary, so projections
+  run in place and the stacked bucket never exists outside the executable;
+* **plan-cache warm pool** — plans build on a thread pool, and the
+  dispatcher skips keys whose plan is still building: a cold shape never
+  stalls the hot path. ``prewarm()`` schedules builds ahead of traffic;
+* **admission control** — the queue is bounded (``max_pending``); overload
+  is shed at ``submit()`` with a typed :class:`QueueFullError`, and
+  per-request deadlines double as dispatch hints (the dispatcher serves the
+  earliest-deadline key first; requests past their deadline complete with
+  :class:`DeadlineExceededError` instead of burning compute).
+
+Mesh-sharded submissions keep their own plan key and execute per request
+through the sharded schedule executor — they are never gather-stacked with
+single-device traffic of the same shape (DESIGN.md §5).
+
+Typical use (see docs/serving.md for a runnable tour)::
+
+    with ProjectionEngine() as eng:
+        t1 = eng.submit(w1, [("inf", 1), ("1", 1)], radius=1.0)
+        t2 = eng.submit(w2, [("inf", 1), ("1", 1)], radius=2.0)  # joins t1's dispatch
+        x1 = eng.result(t1, timeout=5.0)
+        x2 = eng.result(t2, timeout=5.0)
+
+Failure semantics: a dispatch that raises re-queues its group (at the front,
+order preserved) and retries up to ``max_attempts`` times; after that every
+ticket in the group completes exceptionally. ``result()`` re-raises the
+stored error; an unknown, already-claimed, or discarded ticket raises
+:class:`UnknownTicketError`.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.types import ArchConfig
-from repro import models
+from repro.core import multilevel
+from repro.core import plan as planmod
+
+# (shape, dtype name, canonical levels, canonical method, sharding key) —
+# same grouping rule as ProjectionService: requests share a dispatch iff
+# they share a planner executable
+GroupKey = Tuple[Tuple[int, ...], str, Tuple[Tuple[str, int], ...], str,
+                 object]
 
 
-def make_decode_step(cfg: ArchConfig, api, *, n_groups: int = 1):
-    """(params, tokens (B,), cache, pos) -> (next_tokens, logits, cache)."""
-
-    def step(params, tokens, cache, pos):
-        kw = {}
-        if cfg.family in ("dense", "moe", "vlm"):
-            kw["n_groups"] = n_groups
-        logits, cache = api.decode_step(params, tokens, cache, pos, cfg, **kw)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return nxt, logits, cache
-
-    return step
+class ServingError(RuntimeError):
+    """Base class for engine failures surfaced through tickets."""
 
 
-def make_prefill(cfg: ArchConfig, api, *, impl="chunked", act_spec=None):
-    """Teacher-forced pass returning last-position logits (+cache for LMs)."""
-
-    def prefill(params, tokens):
-        kw = {"remat": True, "act_spec": act_spec}
-        if cfg.family not in ("ssm", "hybrid"):
-            kw["impl"] = impl
-        logits, _ = api.forward(params, tokens, cfg, **kw)
-        return logits[:, -1]
-
-    return prefill
+class QueueFullError(ServingError):
+    """Admission control: the bounded queue is full — shed load upstream."""
 
 
-def generate(params, cfg: ArchConfig, prompt, max_new: int, *,
-             n_groups: int = 1, max_len: Optional[int] = None):
-    """Eager greedy generation for the examples: prefill by replaying the
-    prompt through decode_step (simple + exact), then greedy continue."""
-    api = models.get(cfg)
-    b, s = prompt.shape
-    max_len = max_len or (s + max_new)
-    cache = api.make_cache(cfg, b, max_len, dtype=jnp.float32)
-    step = jax.jit(make_decode_step(cfg, api, n_groups=n_groups),
-                   static_argnames=())
-    toks = prompt
-    nxt = None
-    for i in range(s):  # traced pos -> one compile for all steps
-        nxt, _, cache = step(params, toks[:, i], cache, jnp.int32(i))
-    out = [nxt]
-    for j in range(max_new - 1):
-        nxt, _, cache = step(params, out[-1], cache, jnp.int32(s + j))
-        out.append(nxt)
-    return jnp.stack(out, axis=1)
+class DeadlineExceededError(ServingError):
+    """The request's deadline passed before its dispatch executed."""
+
+
+class UnknownTicketError(ServingError, KeyError):
+    """The ticket is not pending here: foreign, already claimed, or
+    discarded."""
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n (bucketed padding: O(log max_batch) traces)."""
+    return 1 << (n - 1).bit_length()
+
+
+class Ticket:
+    """Handle for one submitted projection. Opaque: hand it back to
+    :meth:`ProjectionEngine.poll` / :meth:`ProjectionEngine.result`."""
+
+    __slots__ = ("id", "key", "_engine", "_event", "_state", "_value",
+                 "_error")
+
+    def __init__(self, tid: int, key: GroupKey, engine: "ProjectionEngine"):
+        self.id = tid
+        self.key = key
+        self._engine = engine
+        self._event = threading.Event()
+        self._state = "pending"          # -> done | failed -> claimed
+        self._value: Optional[jax.Array] = None
+        self._error: Optional[BaseException] = None
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"Ticket(id={self.id}, state={self._state})"
+
+
+class _Request:
+    __slots__ = ("ticket", "y", "radius", "deadline", "attempts", "enqueued")
+
+    def __init__(self, ticket: Ticket, y, radius, deadline: Optional[float]):
+        self.ticket = ticket
+        self.y = y
+        self.radius = radius
+        self.deadline = deadline          # absolute time.monotonic(), or None
+        self.attempts = 0
+        self.enqueued = time.monotonic()
+
+
+class ProjectionEngine:
+    """Async continuous-batching projection server over the planner.
+
+    Parameters
+    ----------
+    method:       default backend request for every submit (``"auto"``
+                  autotunes per workload); per-submit ``method=`` overrides.
+    max_batch:    cap on one dispatch's group size (the pow-2 padding bucket
+                  never exceeds it).
+    max_pending:  admission-control bound on queued (undispatched) requests;
+                  ``submit()`` past it raises :class:`QueueFullError`.
+    donate:       donate payload buffers to the executable (in-place
+                  projection). The engine takes ownership of submitted
+                  buffers: a singleton dispatch *consumes* the caller's
+                  array (donation invariant, DESIGN.md §5).
+    max_attempts: dispatch attempts per request before its group's failure
+                  is surfaced through the tickets.
+    warm_workers: threads in the plan warm pool.
+    warm_buckets: pow-2 bucket sizes per key to pre-trace on the warm pool
+                  (e.g. 3 traces buckets 1, 2, 4). Tracing a bucket size at
+                  build time moves its one-time trace/compile cost off the
+                  first dispatch that reaches it — under open-loop traffic
+                  one mid-replay compile delays the whole backlog. 0 (the
+                  default) builds plans only.
+    interpret:    run Pallas-backed plans in interpreter mode (tests/CPU).
+    start:        launch the background dispatcher thread. With
+                  ``start=False`` the engine is synchronous: nothing runs
+                  until :meth:`drain` dispatches inline (deterministic mode
+                  for tests and benchmarks).
+    """
+
+    def __init__(self, *, method: str = planmod.AUTO, max_batch: int = 64,
+                 max_pending: int = 1024, donate: bool = True,
+                 max_attempts: int = 2, warm_workers: int = 2,
+                 warm_buckets: int = 0, interpret: bool = False,
+                 start: bool = True):
+        if max_batch < 1 or max_pending < 1 or max_attempts < 1:
+            raise ValueError(
+                "max_batch, max_pending, max_attempts must be >= 1")
+        self.warm_buckets = int(warm_buckets)
+        self.default_method = method
+        self.max_batch = int(max_batch)
+        self.max_pending = int(max_pending)
+        self.donate = bool(donate)
+        self.max_attempts = int(max_attempts)
+        self.interpret = bool(interpret)
+        self._cv = threading.Condition()
+        self._queues: Dict[GroupKey, List[_Request]] = {}
+        self._plans: Dict[GroupKey, Future] = {}
+        self._fused: Dict[Tuple[GroupKey, int], object] = {}
+        self._pending_count = 0
+        self._inflight = 0
+        self._next_ticket = 0
+        self._stopping = False
+        self.stats = {"submitted": 0, "dispatches": 0, "batched_requests": 0,
+                      "rejected": 0, "expired": 0, "requeues": 0,
+                      "failures": 0, "max_group": 0}
+        self._warm = ThreadPoolExecutor(max_workers=int(warm_workers),
+                                        thread_name_prefix="plan-warm")
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(target=self._loop,
+                                            name="projection-dispatch",
+                                            daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, y, levels, radius=1.0, *, method: Optional[str] = None,
+               deadline: Optional[float] = None) -> Ticket:
+        """Queue one projection; returns a :class:`Ticket`.
+
+        ``deadline`` is seconds from now: a request still queued past it
+        completes with :class:`DeadlineExceededError` instead of executing,
+        and pending deadlines prioritise which key dispatches next.
+
+        Raises :class:`QueueFullError` when ``max_pending`` requests are
+        already queued, and ``ValueError`` for an invalid design/backend —
+        bad requests are rejected here, where the caller can handle it.
+        """
+        with self._cv:
+            if self._stopping:
+                raise ServingError("engine is stopped")
+        y = jnp.asarray(y)
+        levels = planmod.canonical_levels(levels)
+        multilevel._check_levels(y.shape, levels)
+        # committed mesh-sharded tensors get their own plan key: they run
+        # through the sharded schedule executor per request, never
+        # gather-stacked with single-device traffic of the same shape
+        sharding = getattr(y, "sharding", None)
+        if not isinstance(sharding, jax.sharding.NamedSharding):
+            sharding = None
+        shard_key = planmod.canonical_sharding(sharding, y.ndim)
+        requested = self.default_method if method is None else method
+        requested = planmod.validate_backend(
+            y.shape, y.dtype, levels, requested, sharding=shard_key,
+            interpret=self.interpret,
+            radius_kind="scalar" if shard_key is not None else "batch")
+        radius = jnp.asarray(radius, y.dtype)
+        if radius.ndim != 0:
+            raise ValueError(
+                f"radius must be a scalar (one per request), got shape "
+                f"{radius.shape}")
+        key: GroupKey = (y.shape, y.dtype.name, levels, requested, shard_key)
+        abs_deadline = None if deadline is None else \
+            time.monotonic() + float(deadline)
+        with self._cv:
+            if self._stopping:
+                raise ServingError("engine is stopped")
+            if self._pending_count >= self.max_pending:
+                self.stats["rejected"] += 1
+                raise QueueFullError(
+                    f"{self._pending_count} requests queued "
+                    f"(max_pending={self.max_pending})")
+            ticket = Ticket(self._next_ticket, key, self)
+            self._next_ticket += 1
+            self._queues.setdefault(key, []).append(
+                _Request(ticket, y, radius, abs_deadline))
+            self._pending_count += 1
+            self.stats["submitted"] += 1
+            self._ensure_plan_locked(key)
+            self._cv.notify_all()
+        return ticket
+
+    def prewarm(self, shape, dtype, levels, *, method: Optional[str] = None,
+                sharding=None) -> None:
+        """Schedule the plan build for a workload ahead of traffic, on the
+        warm pool. Returns immediately; the first submit for this key then
+        dispatches without a cold-build stall."""
+        shape = tuple(int(s) for s in shape)
+        levels = planmod.canonical_levels(levels)
+        multilevel._check_levels(shape, levels)
+        shard_key = planmod.canonical_sharding(sharding, len(shape))
+        requested = self.default_method if method is None else method
+        requested = planmod.validate_backend(
+            shape, dtype, levels, requested, sharding=shard_key,
+            interpret=self.interpret,
+            radius_kind="scalar" if shard_key is not None else "batch")
+        key: GroupKey = (shape, jnp.dtype(dtype).name, levels, requested,
+                         shard_key)
+        with self._cv:
+            self._ensure_plan_locked(key)
+
+    def wait_warm(self, timeout: Optional[float] = None) -> None:
+        """Block until every scheduled plan build (and its warm-bucket
+        traces) has finished. Re-raises the first build failure."""
+        with self._cv:
+            futs = list(self._plans.values())
+        for fut in futs:
+            fut.result(timeout)
+
+    # --------------------------------------------------------- plan cache
+
+    def _ensure_plan_locked(self, key: GroupKey) -> None:
+        if key not in self._plans:
+            fut = self._warm.submit(self._build_plans, key)
+            fut.add_done_callback(self._on_plan_ready)
+            self._plans[key] = fut
+
+    def _on_plan_ready(self, _fut: Future) -> None:
+        with self._cv:
+            self._cv.notify_all()
+
+    def _build_plans(self, key: GroupKey) -> Dict[str, planmod.ProjectionPlan]:
+        """Build every plan flavour one key dispatches through (runs on the
+        warm pool, so a cold key never stalls the dispatcher)."""
+        shape, dtype, levels, method, shard_key = key
+        if shard_key is not None:
+            # sharded: per-request scalar plan, no donation (the sharded
+            # executor manages its own per-shard buffers)
+            return {"scalar": planmod.make_plan(shape, dtype, levels,
+                                                method=method,
+                                                sharding=shard_key)}
+        # the batch plan itself is NOT donated: the fused dispatch wrapper
+        # (see _fused_dispatch) donates the per-request payloads at its own
+        # boundary and the stacked bucket is internal to the jit
+        plans = {"batch": planmod.make_plan(
+            shape, dtype, levels, radius_kind="batch", method=method,
+            interpret=self.interpret)}
+        if not planmod.is_batch_native(method):
+            # singleton fast path: donate the caller's own buffer (true
+            # in-place projection, zero copies). Batch-native backends take
+            # stacked buckets only, so they route size-1 groups through the
+            # batch plan instead.
+            plans["scalar"] = planmod.make_plan(
+                shape, dtype, levels, method=method,
+                interpret=self.interpret, donate=self.donate)
+        self._warm_dispatch_paths(key, plans)
+        return plans
+
+    def _warm_dispatch_paths(self, key: GroupKey, plans) -> None:
+        """Trace the first ``warm_buckets`` pow-2 dispatch paths (stack +
+        executable + unstack) with dummy payloads, still on the warm pool.
+        Best-effort: a failure here resurfaces at the real dispatch, where
+        the retry/typed-error machinery handles it."""
+        shape, dtype_name, _levels, _method, shard_key = key
+        if shard_key is not None or self.warm_buckets <= 0:
+            return
+        dtype = jnp.dtype(dtype_name)
+        dummy = lambda: _Request(None, jnp.zeros(shape, dtype),
+                                 jnp.asarray(0.5, dtype), None)
+        try:
+            if "scalar" in plans:
+                r = dummy()
+                jax.block_until_ready(plans["scalar"](r.y, r.radius))
+            b, done = 1, 0
+            while b <= self.max_batch and done < self.warm_buckets:
+                jax.block_until_ready(
+                    self._run_group(key, plans, [dummy() for _ in range(b)]))
+                b, done = b * 2, done + 1
+        except Exception:
+            pass
+
+    # --------------------------------------------------------- dispatcher
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                if self._stopping and self._pending_count == 0:
+                    break
+            self._dispatch_once()
+
+    def _dispatch_once(self, wait_s: float = 0.02) -> bool:
+        """Pop and execute one group; returns whether anything ran."""
+        with self._cv:
+            key = self._select_key_locked()
+            if key is None:
+                self._cv.wait(wait_s)
+                return False
+            reqs = self._queues.pop(key)
+            take, rest = reqs[:self.max_batch], reqs[self.max_batch:]
+            if rest:
+                self._queues[key] = rest
+            self._pending_count -= len(take)
+            self._inflight += 1
+        try:
+            self._execute(key, take)
+        finally:
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+        return True
+
+    def _select_key_locked(self) -> Optional[GroupKey]:
+        """Earliest-deadline dispatchable key (deadline hints), FIFO on the
+        longest-waiting head request among deadline-free keys — a hot key
+        cannot starve the others. Keys whose plan is still building are
+        skipped — cold never stalls hot."""
+        best, best_pri = None, (float("inf"), float("inf"))
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            fut = self._plans.get(key)
+            if fut is None:
+                self._ensure_plan_locked(key)
+                continue
+            if not fut.done():
+                continue
+            dl = min((r.deadline for r in q if r.deadline is not None),
+                     default=float("inf"))
+            pri = (dl, q[0].enqueued)
+            if best is None or pri < best_pri:
+                best, best_pri = key, pri
+        return best
+
+    def _execute(self, key: GroupKey, reqs: List[_Request]) -> None:
+        try:
+            plans = self._plans[key].result()
+        except Exception as exc:
+            with self._cv:
+                # drop the failed build so a later submit retries it
+                self._plans.pop(key, None)
+            err = ServingError(f"plan build failed for {key[:4]}: {exc!r}")
+            err.__cause__ = exc
+            for r in reqs:
+                self._fail(r.ticket, err)
+            return
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.ticket._state != "pending":      # discarded before dispatch
+                continue
+            if r.deadline is not None and now > r.deadline:
+                self.stats["expired"] += 1
+                self._fail(r.ticket, DeadlineExceededError(
+                    f"ticket {r.ticket.id} expired "
+                    f"{now - r.deadline:.3f}s before dispatch"))
+                continue
+            live.append(r)
+        if not live:
+            return
+        try:
+            outs = self._run_group(key, plans, live)
+        except Exception as exc:
+            for r in live:
+                r.attempts += 1
+            retry = [r for r in live if r.attempts < self.max_attempts]
+            spent = [r for r in live if r.attempts >= self.max_attempts]
+            for r in spent:
+                self.stats["failures"] += 1
+                err = ServingError(
+                    f"dispatch failed after {r.attempts} attempt(s): {exc!r}")
+                err.__cause__ = exc
+                self._fail(r.ticket, err)
+            if retry:
+                self.stats["requeues"] += 1
+                with self._cv:
+                    # re-queue at the front, order preserved
+                    self._queues.setdefault(key, [])[0:0] = retry
+                    self._pending_count += len(retry)
+                    self._cv.notify_all()
+            return
+        self.stats["dispatches"] += 1
+        self.stats["max_group"] = max(self.stats["max_group"], len(live))
+        if len(live) > 1:
+            self.stats["batched_requests"] += len(live)
+        for r, out in zip(live, outs):
+            self._complete(r.ticket, out)
+
+    def _fused_dispatch(self, key: GroupKey, plans, b: int):
+        """One jitted executable per (key, bucket): stack → project →
+        unstack fused into a single dispatch, each request's payload
+        donated individually. Without the fusion every dispatch pays
+        O(bucket) op-by-op stack/slice calls — which is exactly the
+        per-request overhead continuous batching exists to amortize."""
+        fn = self._fused.get((key, b))
+        if fn is None:
+            batch_plan = plans["batch"]
+
+            def dispatch(*args):               # b payloads then b radii
+                ys = jnp.stack(args[:b])
+                radii = jnp.stack(args[b:])
+                out = batch_plan(ys, radii)
+                return tuple(out[i] for i in range(b))
+
+            donate = tuple(range(b)) if self.donate else ()
+            fn = jax.jit(dispatch, donate_argnums=donate)
+            self._fused[(key, b)] = fn
+        return fn
+
+    def _run_group(self, key: GroupKey, plans, live) -> List[jax.Array]:
+        """The raw compute for one popped group (the retry boundary)."""
+        shape, dtype_name, _levels, _method, shard_key = key
+        if shard_key is not None:
+            p = plans["scalar"]
+            return [p(r.y, r.radius) for r in live]
+        if len(live) == 1 and "scalar" in plans:
+            r = live[0]
+            return [plans["scalar"](r.y, r.radius)]
+        b = min(_bucket(len(live)), self.max_batch)
+        pad = b - len(live)
+        dtype = jnp.dtype(dtype_name)
+        # pad slots get fresh zero buffers — donation forbids handing the
+        # executable the same buffer twice
+        args = ([r.y for r in live]
+                + [jnp.zeros(shape, dtype) for _ in range(pad)]
+                + [r.radius for r in live]
+                + [jnp.zeros((), dtype) for _ in range(pad)])
+        out = self._fused_dispatch(key, plans, b)(*args)
+        return list(out[: len(live)])
+
+    # --------------------------------------------------------- completion
+
+    def _complete(self, ticket: Ticket, value) -> None:
+        with self._cv:
+            if ticket._state != "pending":        # discarded mid-dispatch
+                return
+            ticket._state = "done"
+            ticket._value = value
+        ticket._event.set()
+
+    def _fail(self, ticket: Ticket, error: BaseException) -> None:
+        with self._cv:
+            if ticket._state != "pending":
+                return
+            ticket._state = "failed"
+            ticket._error = error
+        ticket._event.set()
+
+    # ------------------------------------------------------------ results
+
+    def poll(self, ticket: Ticket) -> bool:
+        """True once the ticket completed (result ready or failed)."""
+        self._check_ticket(ticket)
+        return ticket._event.is_set()
+
+    def result(self, ticket: Ticket, timeout: Optional[float] = None):
+        """Projected tensor for a completed ticket — single read (the value
+        is released on return). Blocks up to ``timeout`` seconds
+        (``TimeoutError`` past it); re-raises the dispatch error for a
+        failed ticket; :class:`UnknownTicketError` for a foreign, claimed,
+        or discarded ticket."""
+        self._check_ticket(ticket)
+        if self._thread is None and not ticket._event.is_set():
+            self.drain()                   # synchronous mode: dispatch inline
+        if not ticket._event.wait(timeout):
+            raise TimeoutError(
+                f"ticket {ticket.id} incomplete after {timeout}s")
+        with self._cv:
+            state = ticket._state
+            if state == "done":
+                ticket._state = "claimed"
+                value, ticket._value = ticket._value, None
+                return value
+            if state == "failed":
+                ticket._state = "claimed"
+                error, ticket._error = ticket._error, None
+            else:
+                error = UnknownTicketError(
+                    f"ticket {ticket.id} already {state}")
+        raise error
+
+    def discard(self, ticket: Ticket) -> None:
+        """Drop a ticket that will never be claimed (no-op if already
+        claimed). A discarded pending request is skipped at dispatch; a
+        discarded completed result is released immediately."""
+        self._check_ticket(ticket)
+        with self._cv:
+            if ticket._state == "claimed":
+                return
+            ticket._state = "discarded"
+            ticket._value = None
+            ticket._error = None
+        ticket._event.set()
+
+    def _check_ticket(self, ticket) -> None:
+        if not isinstance(ticket, Ticket) or ticket._engine is not self:
+            raise UnknownTicketError(
+                f"not a ticket of this engine: {ticket!r}")
+
+    # ---------------------------------------------------------- lifecycle
+
+    def pending(self) -> int:
+        """Queued (undispatched) requests."""
+        with self._cv:
+            return self._pending_count
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has completed. With
+        ``start=False`` this IS the dispatcher: groups execute inline, on
+        this thread, until the queue is empty."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        if self._thread is None:
+            while True:
+                with self._cv:
+                    if not self._pending_count and not self._inflight:
+                        return
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError("drain timed out")
+                self._dispatch_once(wait_s=0.005)
+        with self._cv:
+            while self._pending_count or self._inflight:
+                left = None if deadline is None else \
+                    deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise TimeoutError("drain timed out")
+                self._cv.wait(left if left is not None else 0.1)
+
+    def stop(self, drain: bool = True) -> None:
+        """Shut the engine down. ``drain=True`` (default) finishes queued
+        work first; ``drain=False`` fails still-queued tickets with
+        :class:`ServingError`. Idempotent; ``submit()`` raises afterwards."""
+        with self._cv:
+            self._stopping = True
+            if not drain:
+                for q in self._queues.values():
+                    for r in q:
+                        self._fail(r.ticket, ServingError("engine stopped"))
+                self._queues.clear()
+                self._pending_count = 0
+            self._cv.notify_all()
+        if self._thread is not None:
+            if drain:
+                self.drain()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        elif drain:
+            self.drain()
+        self._warm.shutdown(wait=True)
+
+    def __enter__(self) -> "ProjectionEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc[0] is None)
+
+    # -------------------------------------------------------- convenience
+
+    def project(self, y, levels, radius=1.0, *,
+                method: Optional[str] = None):
+        """submit + result in one call (single-request convenience)."""
+        return self.result(self.submit(y, levels, radius, method=method))

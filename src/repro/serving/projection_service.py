@@ -1,14 +1,23 @@
-"""Projection as a served workload: batch heterogeneous requests by plan key.
+"""Synchronous flush()-driven projection batching (the legacy serving flow).
 
 A request is one tensor + norm design + radius. The service groups pending
 requests whose *plan key* matches — same shape, dtype, canonical levels, and
 backend — stacks each group along a fresh leading axis, and executes it with
-ONE vmap'd planner executable (``radius_kind="batch"``, per-request radii).
+ONE planner batch executable (``radius_kind="batch"``, per-request radii).
 Heterogeneous traffic therefore costs one dispatch per distinct workload
 shape instead of one per request, and every dispatch reuses the planner's
 cached, autotuned executable (DESIGN.md §2). Group batches are padded to the
 next power of two before stacking, so varying traffic re-traces the batch
 executable only O(log max-group) times, not once per distinct group size.
+
+**Deprecated for serving**: nothing executes until a caller invokes
+``flush()``, so under live traffic every request waits for its bucket — the
+bucket-and-wait latency profile DESIGN.md §5 analyses. New code should use
+:class:`repro.serving.engine.ProjectionEngine`: the same plan-key grouping,
+but with continuous batching (a request joins the next in-flight dispatch),
+buffer donation, a plan warm pool, and admission control. This class stays
+as the simple synchronous building block — no threads, explicit flush — and
+as the measured baseline of ``benchmarks/run.py --only serving``.
 
 Typical use (see docs/api.md for a runnable version):
 

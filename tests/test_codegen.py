@@ -233,7 +233,7 @@ class TestOpsDispatch:
             got, ref.bilevel_l1inf_ref(y, 2.0, method="filter"), atol=1e-6)
         key = plan.PlanKey((16, 32), "float32", (("inf", 1), ("1", 1)),
                            "scalar", jax.devices()[0].platform)
-        assert (key, "filter") in plan._PLANS
+        assert (key, "filter", False) in plan._PLANS
 
 
 # --------------------------------------------------------------------------- #
@@ -276,3 +276,87 @@ if _HAVE_HYPOTHESIS:
                                                  method="sort")
             got = codegen.codegen_project(y, levels, radius, interpret=True)
             np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+class TestBatchedCodegen:
+    """The batched-grid serving lowering (generate_batched): the stacked
+    batch axis joins the Pallas grid with per-item radii in SMEM, instead of
+    vmap-lifting the per-item kernel."""
+
+    BATCH_DESIGNS = [
+        ("bilevel",  (8, 20),    BILEVEL),
+        ("trilevel", (3, 9, 24), TRILEVEL),
+        ("l12",      (6, 9),     [("2", 1), ("1", 1)]),
+        ("flat_l1",  (40,),      [("1", 1)]),
+        ("l1inf",    (5, 12),    [("1", 1), ("inf", 1)]),
+    ]
+
+    @pytest.mark.parametrize("name,shape,levels", BATCH_DESIGNS)
+    @pytest.mark.parametrize("batch", [1, 3, 4])
+    def test_matches_per_item_executor(self, name, shape, levels, batch):
+        sched = schedule.compile_schedule(shape, levels)
+        fn = codegen.generate_batched(sched, np.float32, interpret=True)
+        ys = jnp.stack([_rand(shape, seed=100 * batch + i, scale=3.0)
+                        for i in range(batch)])
+        radii = jnp.asarray([0.5 + 0.75 * i for i in range(batch)],
+                            jnp.float32)
+        out = fn(ys, radii)
+        for i in range(batch):
+            want = multilevel.multilevel_project(ys[i], levels, radii[i],
+                                                 method="sort")
+            np.testing.assert_allclose(out[i], want, atol=1e-4)
+
+    def test_gradient_matches_vmap_executor(self):
+        sched = schedule.compile_schedule((8, 20), BILEVEL)
+        fn = codegen.generate_batched(sched, np.float32, interpret=True)
+        ys = jnp.stack([_rand((8, 20), seed=s, scale=3.0) for s in range(3)])
+        radii = jnp.asarray([0.5, 1.5, 4.0], jnp.float32)
+
+        def ref_loss(ys):
+            out = jax.vmap(lambda y, r: multilevel.multilevel_project(
+                y, BILEVEL, r, method="sort"))(ys, radii)
+            return jnp.sum(out ** 2)
+
+        g_got = jax.grad(lambda ys: jnp.sum(fn(ys, radii) ** 2))(ys)
+        g_want = jax.grad(ref_loss)(ys)
+        np.testing.assert_allclose(g_got, g_want, atol=1e-4)
+
+    def test_rejects_wrong_rank_and_radii(self):
+        sched = schedule.compile_schedule((8, 20), BILEVEL)
+        fn = codegen.generate_batched(sched, np.float32, interpret=True)
+        ys = jnp.stack([_rand((8, 20), seed=s) for s in range(2)])
+        with pytest.raises(ValueError):
+            fn(ys[0], jnp.asarray([1.0], jnp.float32))  # missing batch axis
+        with pytest.raises(ValueError):
+            fn(ys, jnp.asarray([1.0, 2.0, 3.0], jnp.float32))  # radii len
+
+    def test_rejects_batch_dims_schedule(self):
+        sched = schedule.compile_schedule((3, 8, 16), BILEVEL, batch_dims=1)
+        with pytest.raises(ValueError):
+            codegen.generate_batched(sched, np.float32, interpret=True)
+
+    def test_codegen_batch_plan_backend(self):
+        # the serving route: codegen_batch through the planner on a
+        # radius_kind="batch" key, one batched-grid dispatch for the bucket
+        ys = jnp.stack([_rand((8, 16), seed=s) for s in range(4)])
+        radii = jnp.asarray([0.5, 1.0, 2.0, 3.0], jnp.float32)
+        p = plan.make_plan((8, 16), jnp.float32, BILEVEL,
+                           radius_kind="batch", method="codegen_batch",
+                           interpret=True)
+        out = p(ys, radii)
+        for i in range(4):
+            want = multilevel.multilevel_project(ys[i], BILEVEL, radii[i],
+                                                 method="sort")
+            np.testing.assert_allclose(out[i], want, atol=1e-5)
+
+    def test_codegen_batch_rejected_on_scalar_key(self):
+        # batch-native: a scalar-radius plan key must not offer it
+        with pytest.raises(ValueError, match="not available"):
+            plan.make_plan((8, 16), jnp.float32, BILEVEL,
+                           method="codegen_batch", interpret=True)
+
+    def test_auto_offers_codegen_batch_on_batch_keys(self):
+        p = plan.make_plan((8, 16), jnp.float32, BILEVEL,
+                           radius_kind="batch", method="auto",
+                           interpret=True)
+        assert "codegen_batch" in p.timings_us

@@ -12,13 +12,14 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # markdown files whose ```python blocks must execute cleanly, in order
-EXECUTABLE_DOCS = ["docs/api.md", "README.md"]
+EXECUTABLE_DOCS = ["docs/api.md", "docs/serving.md", "README.md"]
 
 # modules whose docstring ``>>>`` examples must pass (and exist)
 DOCTEST_MODULES = ["repro.core.plan"]
 # modules doctested opportunistically (no examples required yet)
 DOCTEST_OPTIONAL = ["repro.core.ball", "repro.core.multilevel",
-                    "repro.core.bilevel", "repro.serving.projection_service"]
+                    "repro.core.bilevel", "repro.serving.engine",
+                    "repro.serving.projection_service"]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 

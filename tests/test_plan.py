@@ -194,3 +194,60 @@ class TestCodegenBackendPlans:
         with pytest.raises(ValueError, match="unknown projection backend"):
             plan.make_plan((16, 130), jnp.float32, BILEVEL,
                            method="fused_bilevel", interpret=True)
+
+
+class TestDonationAndBatchNative:
+    """Serving-facing planner features: donated executables (in-place
+    projection for the engine) and batch-native backend gating."""
+
+    def test_donating_plan_consumes_input(self):
+        p = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="sort",
+                           donate=True)
+        y = _rand((6, 10), seed=20)
+        want = multilevel.multilevel_project(y, BILEVEL, 1.0, method="sort")
+        out = p(y, 1.0)
+        np.testing.assert_allclose(out, want, atol=1e-6)
+        assert y.is_deleted()          # buffer was donated to the executable
+
+    def test_plain_plan_preserves_input(self):
+        p = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="sort")
+        y = _rand((6, 10), seed=21)
+        p(y, 1.0)
+        assert not y.is_deleted()
+
+    def test_donating_and_plain_plans_are_distinct(self):
+        a = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="sort")
+        b = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="sort",
+                           donate=True)
+        assert a is not b
+        assert plan.make_plan((6, 10), jnp.float32, BILEVEL,
+                              method="sort", donate=True) is b
+
+    def test_donating_batch_plan(self):
+        p = plan.make_plan((6, 10), jnp.float32, BILEVEL,
+                           radius_kind="batch", method="sort", donate=True)
+        ys = jnp.stack([_rand((6, 10), seed=s) for s in range(3)])
+        radii = jnp.asarray([0.5, 1.0, 2.0], jnp.float32)
+        refs = [multilevel.multilevel_project(ys[i], BILEVEL, radii[i],
+                                              method="sort")
+                for i in range(3)]
+        out = p(ys, radii)
+        assert ys.is_deleted()
+        for i in range(3):
+            np.testing.assert_allclose(out[i], refs[i], atol=1e-6)
+
+    def test_is_batch_native_registry(self):
+        assert plan.is_batch_native("codegen_batch")
+        assert not plan.is_batch_native("codegen")
+        assert not plan.is_batch_native("sort")
+        assert not plan.is_batch_native("auto")
+
+    def test_validate_backend_radius_kind_gate(self):
+        # codegen_batch validates only for batch keys
+        assert plan.validate_backend((8, 16), jnp.float32, BILEVEL,
+                                     "codegen_batch", interpret=True,
+                                     radius_kind="batch") == "codegen_batch"
+        with pytest.raises(ValueError, match="not available"):
+            plan.validate_backend((8, 16), jnp.float32, BILEVEL,
+                                  "codegen_batch", interpret=True,
+                                  radius_kind="scalar")

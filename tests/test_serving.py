@@ -1,6 +1,8 @@
-"""Serving engine: greedy generation, batched requests, ring caches."""
+"""Serving tier: LM generation, flush()-batched service, and the
+continuous-batching ProjectionEngine (typed failures, donation, batching)."""
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +12,7 @@ import pytest
 from repro import models
 from repro.configs import registry
 from repro.models import params as PM
-from repro.serving import engine
+from repro.serving import lm
 
 
 def _setup(name, seed=0):
@@ -25,8 +27,8 @@ class TestGenerate:
         cfg, api, params = _setup("granite-3-2b")
         prompt = jnp.asarray(
             np.random.default_rng(0).integers(0, cfg.vocab, (2, 8)), jnp.int32)
-        a = engine.generate(params, cfg, prompt, max_new=6)
-        b = engine.generate(params, cfg, prompt, max_new=6)
+        a = lm.generate(params, cfg, prompt, max_new=6)
+        b = lm.generate(params, cfg, prompt, max_new=6)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert a.shape == (2, 6)
 
@@ -37,8 +39,8 @@ class TestGenerate:
         p1 = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
         p2 = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
         both = jnp.concatenate([p1, p2], axis=0)
-        o_both = engine.generate(params, cfg, both, max_new=5)
-        o_1 = engine.generate(params, cfg, p1, max_new=5)
+        o_both = lm.generate(params, cfg, both, max_new=5)
+        o_1 = lm.generate(params, cfg, p1, max_new=5)
         np.testing.assert_array_equal(np.asarray(o_both[0]), np.asarray(o_1[0]))
 
     def test_swa_ring_cache_generation(self):
@@ -49,7 +51,7 @@ class TestGenerate:
         prompt = jnp.asarray(
             np.random.default_rng(2).integers(0, cfg.vocab, (1, 24)), jnp.int32)
         cache = api.make_cache(cfg, 1, max_len=40, dtype=jnp.float32)
-        step = engine.make_decode_step(cfg, api)
+        step = lm.make_decode_step(cfg, api)
         logits = None
         for i in range(prompt.shape[1]):
             _, logits, cache = step(params, prompt[:, i], cache, jnp.int32(i))
@@ -61,7 +63,7 @@ class TestGenerate:
         cfg, api, params = _setup("xlstm-1.3b")
         prompt = jnp.asarray(
             np.random.default_rng(3).integers(0, cfg.vocab, (2, 6)), jnp.int32)
-        out = engine.generate(params, cfg, prompt, max_new=4)
+        out = lm.generate(params, cfg, prompt, max_new=4)
         assert out.shape == (2, 4)
         assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab))
 
@@ -69,10 +71,10 @@ class TestGenerate:
         cfg, api, params = _setup("granite-3-2b")
         prompt = jnp.asarray(
             np.random.default_rng(4).integers(0, cfg.vocab, (2, 10)), jnp.int32)
-        pre = engine.make_prefill(cfg, api, impl="naive")
+        pre = lm.make_prefill(cfg, api, impl="naive")
         last = pre(params, prompt)
         cache = api.make_cache(cfg, 2, max_len=16, dtype=jnp.float32)
-        step = engine.make_decode_step(cfg, api)
+        step = lm.make_decode_step(cfg, api)
         logits = None
         for i in range(10):
             _, logits, cache = step(params, prompt[:, i], cache, jnp.int32(i))
@@ -188,3 +190,171 @@ class TestProjectionService:
         assert svc.stats["executed_batches"] == 1
         assert svc.stats["batched_requests"] == 2
         svc.result(ta), svc.result(tb)
+
+
+# ------------------------------------------------------- projection engine
+class TestProjectionEngine:
+    """Continuous-batching async engine (serving/engine): typed failure
+    paths, donation invariants, dispatch-join behaviour."""
+
+    def _eng(self, **kw):
+        from repro.core import plan
+        from repro.serving import ProjectionEngine
+        plan.clear_cache()
+        kw.setdefault("method", "sort")
+        kw.setdefault("start", False)  # deterministic: drain() dispatches
+        return ProjectionEngine(**kw)
+
+    def test_pending_requests_join_one_dispatch(self):
+        # continuous batching: every request queued for a key joins the
+        # next dispatch for that key — one executable call for all five
+        from repro.core import multilevel
+        eng = self._eng()
+        rng = np.random.default_rng(0)
+        lv = [("inf", 1), ("1", 1)]
+        ys = [jnp.asarray(rng.normal(size=(6, 10)), jnp.float32)
+              for _ in range(5)]
+        wants = [multilevel.multilevel_project(y, lv, 0.5 + 0.25 * i,
+                                               method="sort")
+                 for i, y in enumerate(ys)]  # before submit: ys get donated
+        ts = [eng.submit(y, lv, radius=0.5 + 0.25 * i)
+              for i, y in enumerate(ys)]
+        eng.drain()
+        assert eng.stats["dispatches"] == 1
+        assert eng.stats["batched_requests"] == 5
+        for t, want in zip(ts, wants):
+            np.testing.assert_allclose(eng.result(t), want, atol=1e-5)
+        eng.stop()
+
+    def test_threaded_submit_poll_result(self):
+        from repro.core import ball
+        eng = self._eng(start=True)
+        y = jnp.asarray(np.random.default_rng(1).normal(size=(16,)),
+                        jnp.float32)
+        want = ball.project_l1(y, 1.0)  # before submit: y gets donated
+        t = eng.submit(y, [("1", 1)], radius=1.0)
+        out = eng.result(t, timeout=60.0)
+        assert eng.poll(t)
+        np.testing.assert_allclose(out, want, atol=1e-6)
+        eng.stop()
+
+    def test_singleton_donates_callers_buffer(self):
+        # donation invariant: a singleton dispatch consumes the submitted
+        # buffer (in-place projection, no payload copy)
+        eng = self._eng(donate=True)
+        y = jnp.asarray(np.random.default_rng(2).normal(size=(6, 10)),
+                        jnp.float32)
+        t = eng.submit(y, [("inf", 1), ("1", 1)], radius=1.0)
+        out = eng.result(t)
+        assert y.is_deleted()
+        assert not out.is_deleted()
+        eng.stop()
+
+    def test_donate_false_preserves_buffers(self):
+        eng = self._eng(donate=False)
+        y = jnp.asarray(np.random.default_rng(3).normal(size=(6, 10)),
+                        jnp.float32)
+        eng.result(eng.submit(y, [("inf", 1), ("1", 1)], radius=1.0))
+        assert not y.is_deleted()
+        eng.stop()
+
+    def test_queue_full_typed_rejection(self):
+        from repro.serving import QueueFullError, ServingError
+        eng = self._eng(max_pending=2)
+        eng.submit(jnp.ones((4,)), [("1", 1)])
+        eng.submit(jnp.ones((4,)), [("1", 1)])
+        with pytest.raises(QueueFullError) as ei:
+            eng.submit(jnp.ones((4,)), [("1", 1)])
+        assert isinstance(ei.value, ServingError)  # typed, catchable family
+        assert eng.stats["rejected"] == 1
+        eng.stop()
+
+    def test_deadline_expired_before_dispatch(self):
+        from repro.serving import DeadlineExceededError
+        eng = self._eng()
+        t = eng.submit(jnp.ones((8,)), [("1", 1)], deadline=0.0)
+        time.sleep(0.01)
+        eng.drain()
+        assert eng.stats["expired"] == 1
+        with pytest.raises(DeadlineExceededError):
+            eng.result(t)
+        eng.stop()
+
+    def test_failed_group_requeues_then_fails_typed(self):
+        # a dispatch that raises re-queues its group; after max_attempts
+        # the tickets complete exceptionally with the stored error
+        from repro.serving import ServingError
+        eng = self._eng(max_attempts=2)
+        calls = []
+
+        def flaky(key, plans, live):
+            calls.append(len(live))
+            raise RuntimeError("injected dispatch failure")
+
+        eng._run_group = flaky
+        t = eng.submit(jnp.ones((8,)), [("1", 1)])
+        eng.drain()
+        assert calls == [1, 1]  # original attempt + one re-queue
+        assert eng.stats["requeues"] == 1 and eng.stats["failures"] == 1
+        with pytest.raises(ServingError, match="injected"):
+            eng.result(t)
+        eng.stop()
+
+    def test_unknown_and_discarded_ticket_raise_typed(self):
+        from repro.serving import UnknownTicketError
+        eng = self._eng()
+        with pytest.raises(UnknownTicketError):
+            eng.result(object())  # foreign handle
+        t = eng.submit(jnp.ones((8,)), [("1", 1)])
+        eng.discard(t)
+        eng.drain()
+        with pytest.raises(UnknownTicketError):
+            eng.result(t)
+        t2 = eng.submit(jnp.ones((8,)), [("1", 1)])
+        eng.result(t2)
+        with pytest.raises(UnknownTicketError):
+            eng.result(t2)  # single read: second claim is unknown
+        eng.stop()
+
+    def test_batch_native_backend_routes_singleton_via_batch_plan(self):
+        # codegen_batch executables take stacked buckets only: a size-1
+        # group must still dispatch through the batch plan, and the
+        # answer must match the reference
+        from repro.core import multilevel
+        eng = self._eng(method="codegen_batch", interpret=True)
+        y = jnp.asarray(np.random.default_rng(5).normal(size=(6, 10)),
+                        jnp.float32)
+        lv = [("inf", 1), ("1", 1)]
+        want = multilevel.multilevel_project(y, lv, 0.7, method="sort")
+        out = eng.project(y, lv, radius=0.7)
+        np.testing.assert_allclose(out, want, atol=1e-5)
+        eng.stop()
+
+    def test_bad_request_rejected_at_submit(self):
+        eng = self._eng()
+        with pytest.raises(ValueError):
+            eng.submit(jnp.ones((4, 6, 2)), [("inf", 1), ("1", 1)])
+        with pytest.raises(ValueError):
+            eng.submit(jnp.ones((4,)), [("1", 1)], method="nope")
+        with pytest.raises(ValueError):
+            eng.submit(jnp.ones((4,)), [("1", 1)], jnp.ones((3,)))
+        assert eng.pending() == 0
+        eng.stop()
+
+    def test_stop_then_submit_raises(self):
+        from repro.serving import ServingError
+        eng = self._eng()
+        eng.stop()
+        with pytest.raises(ServingError):
+            eng.submit(jnp.ones((4,)), [("1", 1)])
+
+    def test_context_manager_drains(self):
+        from repro.core import ball
+        from repro.serving import ProjectionEngine
+        y = jnp.asarray(np.random.default_rng(6).normal(size=(16,)),
+                        jnp.float32)
+        want = ball.project_l1(y, 1.0)  # before submit: y gets donated
+        with ProjectionEngine(method="sort") as eng:
+            t = eng.submit(y, [("1", 1)], radius=1.0)
+            out = eng.result(t, timeout=60.0)
+        np.testing.assert_allclose(out, want, atol=1e-6)
