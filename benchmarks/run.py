@@ -31,6 +31,7 @@ _JSON_NAMES = {
     "sharded": "BENCH_sharded_multilevel.json",
     "codegen": "BENCH_codegen_kernels.json",
     "serving": "BENCH_serving_latency.json",
+    "train": "BENCH_train_step.json",
     "sae": "BENCH_sae_tables.json",
 }
 
@@ -58,7 +59,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
-                         "sharded,codegen,serving,sae")
+                         "sharded,codegen,serving,train,sae")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -66,7 +67,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
-    from . import projections, sae_tables, serving_trace
+    from . import projections, sae_tables, serving_trace, train_step
 
     sections = {
         "fig1": lambda: projections.fig1_radius(full=args.full),
@@ -78,6 +79,7 @@ def main(argv=None) -> None:
         "sharded": lambda: projections.sharded_sweep(full=args.full),
         "codegen": lambda: projections.codegen_sweep(full=args.full),
         "serving": lambda: serving_trace.serving_sweep(full=args.full),
+        "train": lambda: train_step.train_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
     }

@@ -1,0 +1,125 @@
+"""Projected-optimizer epilogue benchmark: fused single-pass vs unfused.
+
+The ``train`` section times exactly the two code paths a projected train step
+can take after the gradient is ready:
+
+* **unfused** — the pre-fusion three-dispatch sequence a standalone optimizer
+  stack executes: ``jit(adamw.update)`` writes p′, ``jit(projection hook)``
+  reads p′ back and writes Π(p′), and (when a master copy exists) a third
+  jitted sweep re-syncs it — three round-trips through HBM per matched leaf;
+* **fused** — one ``jit(fused_update)`` dispatch (``optim/fused_step.py``):
+  update → project (f32) → cast, each leaf read once / written once.
+
+Reported per workload: fused µs/step, unfused µs/step, their ratio
+(``fused_vs_unfused``, the gated quantity — the committed artifact
+``benchmarks/results/BENCH_train_step.json`` pins it and CI's training job
+re-measures; machine speed cancels in the ratio), and the HBM sweep counts
+(``hbm_passes=1v3``) the fusion removes.  Timing is interleaved min-of-rounds
+(same estimator as the planner autotuner: contention only inflates a round).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.types import ProjectionSpec, TrainConfig
+from repro.optim import adamw, fused_step
+from repro.optim.projection_hook import make_projection_hook
+
+BILEVEL = (("inf", 1), ("1", 1))
+TRILEVEL = (("inf", 1), ("inf", 1), ("1", 1))
+
+_ROUNDS = 7   # interleaved rounds; min per side kept
+
+
+def _params(shapes, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return {name: jnp.asarray(rng.normal(size=s) * 0.5, dtype)
+            for name, s in shapes.items()}
+
+
+def _workloads(full):
+    # (tag, shapes, levels, TrainConfig overrides); w_up/w_in match the spec
+    # pattern, w_skip rides along unmatched (the fusion must not tax it).
+    # All three use the mixed-precision layout projected LLM training runs
+    # (low-precision params + f32 master), so the unfused baseline honestly
+    # pays its third master-sync sweep.
+    k = 4 if full else 1
+    mixed = dict(param_dtype="bfloat16", master_dtype="float32")
+    return [
+        ("bilevel_bf16",
+         {"w_up": (4 * k, 64 * k, 256), "w_in": (128 * k, 256),
+          "w_skip": (128 * k, 64)},
+         BILEVEL, dict(mixed)),
+        ("trilevel_bf16",
+         {"w_up": (2 * k, 8, 32 * k, 128), "w_in": (8, 64 * k, 128),
+          "w_skip": (128 * k, 64)},
+         TRILEVEL, dict(mixed)),
+        ("int8_master",
+         {"w_up": (4 * k, 64 * k, 256), "w_in": (128 * k, 256),
+          "w_skip": (128 * k, 64)},
+         BILEVEL, dict(mixed, moment_dtype="int8")),
+    ]
+
+
+def _unfused_pipeline(cfg):
+    """The pre-fusion sequence as three separate jitted dispatches."""
+    hook = make_projection_hook(cfg.projection)
+    up = jax.jit(lambda g, s, p: adamw.update(g, s, p, cfg))
+    proj = jax.jit(hook)
+    sync = jax.jit(lambda p, m: jax.tree_util.tree_map(
+        lambda w, mm: w.astype(mm.dtype), p, m))
+
+    def step(g, s, p):
+        new_p, new_s, metrics = up(g, s, p)
+        new_p = proj(new_p, new_s["step"])
+        if "master" in new_s:
+            new_s = dict(new_s)
+            new_s["master"] = sync(new_p, new_s["master"])
+        return new_p, new_s, metrics
+
+    return step
+
+
+def _min_of_rounds(fused_fn, unfused_fn, args, rounds=_ROUNDS):
+    for fn in (fused_fn, unfused_fn):       # compile + warm both sides
+        for _ in range(2):
+            jax.block_until_ready(fn(*args))
+    best = {"fused": float("inf"), "unfused": float("inf")}
+    for _ in range(rounds):
+        for name, fn in (("fused", fused_fn), ("unfused", unfused_fn)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], (time.perf_counter() - t0) * 1e6)
+    return best["fused"], best["unfused"]
+
+
+def train_sweep(full=False):
+    """The ``train`` benchmark section (BENCH_train_step.json)."""
+    rng = np.random.default_rng(1)
+    rows = []
+    for tag, shapes, levels, over in _workloads(full):
+        spec = ProjectionSpec(pattern=r"w_up|w_in", levels=levels,
+                              radius=1.0, method="bisect")
+        cfg = TrainConfig(lr=1e-3, warmup=1, total_steps=100,
+                          projection=spec, **over)
+        params = _params(shapes, jnp.dtype(cfg.param_dtype))
+        grads = jax.tree_util.tree_map(
+            lambda p: jnp.asarray(rng.normal(size=p.shape), p.dtype), params)
+        state = adamw.init(params, cfg)
+
+        fused = fused_step.make_fused_step(cfg, donate=False)
+        unfused = _unfused_pipeline(cfg)
+        t_fused, t_unfused = _min_of_rounds(fused, unfused,
+                                            (grads, state, params))
+        ratio = t_fused / t_unfused
+        n_par = sum(int(np.prod(s)) for s in shapes.values())
+        rows.append((
+            f"train_step_fused_{tag}", t_fused,
+            f"unfused_us={t_unfused:.1f},fused_vs_unfused={ratio:.3f},"
+            f"hbm_passes=1v3,params={n_par}"))
+    return rows

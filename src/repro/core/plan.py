@@ -83,6 +83,7 @@ class PlanKey(NamedTuple):
     device: str                           # jax platform ('cpu' | 'tpu' | ...)
     interpret: bool = False               # Pallas interpret mode (tests)
     sharding: Optional[ShardingKey] = None  # None = single-device workload
+    grad: bool = False                    # training key: autotuned under vjp
 
 
 class PlanBackend(NamedTuple):
@@ -173,8 +174,11 @@ def canonical_sharding(sharding, ndim: int) -> Optional[ShardingKey]:
 
 def _sharded_available(key: PlanKey) -> bool:
     # scalar-radius only: a batch plan vmaps its executable, and shard_map
-    # bodies don't batch — sharded serving groups run per-request instead
+    # bodies don't batch — sharded serving groups run per-request instead.
+    # Training (grad) keys are excluded too: differentiating through the
+    # shard_map body is untested; mesh-native training keeps the hook path.
     return (key.sharding is not None and key.radius_kind == "scalar"
+            and not key.grad
             and (key.sharding.mesh_axes, key.sharding.devices) in _MESHES)
 
 
@@ -308,6 +312,21 @@ def _bench_args(key: PlanKey):
     return y, radius
 
 
+def _grad_fn(key: PlanKey, name: str) -> Callable:
+    """value_and_grad of a scalarized loss through one backend — what a
+    training step actually executes for a ``grad`` key, so that is what the
+    autotuner must time (a backend that wins the forward shoot-out can lose
+    it under vjp: residual stashes and backward structure differ)."""
+    base = _build_backend_fn(key, name)
+    if key.radius_kind == "batch" and not is_batch_native(name):
+        base = jax.vmap(base, in_axes=(0, 0))
+
+    def loss(y, radius):
+        return jnp.sum(base(y, radius) ** 2)
+
+    return jax.jit(jax.value_and_grad(loss))
+
+
 def _autotune(key: PlanKey) -> Tuple[str, Dict[str, float]]:
     """Interleaved min-of-rounds shoot-out over every candidate backend.
 
@@ -316,17 +335,25 @@ def _autotune(key: PlanKey) -> Tuple[str, Dict[str, float]]:
     by scheduler noise, interleaving keeps machine drift from favouring
     whichever candidate ran in a calm window, and a wrong verdict is
     permanent for the process.
+
+    ``grad`` keys time forward+backward (``value_and_grad`` of a scalarized
+    loss) instead of the plain call — the verdict that matters for a
+    projection differentiated through by training.
     """
     y, radius = _bench_args(key)
-    execs = {name: _get_executable(key, name) for name in _candidates(key)}
-    for ex in execs.values():
+    if key.grad:
+        fns = {name: _grad_fn(key, name) for name in _candidates(key)}
+    else:
+        fns = {name: _get_executable(key, name).fn
+               for name in _candidates(key)}
+    for fn in fns.values():
         for _ in range(2):
-            jax.block_until_ready(ex.fn(y, radius))  # compile + warm
-    timings: Dict[str, float] = dict.fromkeys(execs, float("inf"))
+            jax.block_until_ready(fn(y, radius))  # compile + warm
+    timings: Dict[str, float] = dict.fromkeys(fns, float("inf"))
     for _ in range(_AUTOTUNE_REPS):
-        for name, ex in execs.items():
+        for name, fn in fns.items():
             t0 = time.perf_counter()
-            jax.block_until_ready(ex.fn(y, radius))
+            jax.block_until_ready(fn(y, radius))
             timings[name] = min(timings[name],
                                 (time.perf_counter() - t0) * 1e6)
     winner = min(timings, key=timings.get)
@@ -393,7 +420,7 @@ class ProjectionPlan:
 def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
               method: str = AUTO, *, interpret: bool = False,
               device: str | None = None, sharding=None,
-              donate: bool = False) -> ProjectionPlan:
+              donate: bool = False, grad: bool = False) -> ProjectionPlan:
     """Build (or fetch from cache) the projection plan for one workload.
 
     ``shape``/``dtype`` describe one tensor to project (for
@@ -417,6 +444,15 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
     ``radius_kind="batch"``) is consumed in place — the serving engine's
     no-copy path. Donating and non-donating plans share the autotune verdict
     but hold separate executables; callers must not reuse a donated input.
+
+    ``grad=True`` marks a TRAINING key: the workload will be differentiated
+    through (the projection sits inside a loss), so under ``method="auto"``
+    the autotuner times ``value_and_grad`` of each candidate instead of the
+    forward call. Forward and grad keys cache separate verdicts — a backend
+    with a cheap forward but an expensive (or recomputing) backward loses
+    only the grad shoot-out. The plan's executable is the forward either way
+    (it is differentiable; the chosen backend's custom VJP is what the
+    enclosing ``jax.grad`` picks up).
     """
     _maybe_register_kernel_backends()
     shape = tuple(int(s) for s in shape)
@@ -429,7 +465,7 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
     if device is None:
         device = jax.devices()[0].platform
     key = PlanKey(shape, dtype.name, lv, radius_kind, device, bool(interpret),
-                  canonical_sharding(sharding, len(shape)))
+                  canonical_sharding(sharding, len(shape)), bool(grad))
     cache_key = (key, method, donate)
     if cache_key in _PLANS:
         return _PLANS[cache_key]
@@ -452,7 +488,8 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
 
 def validate_backend(shape, dtype, levels, method: str, *,
                      device: str | None = None, interpret: bool = False,
-                     sharding=None, radius_kind: str = "scalar") -> str:
+                     sharding=None, radius_kind: str = "scalar",
+                     grad: bool = False) -> str:
     """Canonicalize + validate a backend name for a workload, without
     building (or autotuning) a plan.
 
@@ -470,19 +507,24 @@ def validate_backend(shape, dtype, levels, method: str, *,
         device = jax.devices()[0].platform
     key = PlanKey(tuple(int(s) for s in shape), np.dtype(dtype).name,
                   canonical_levels(levels), radius_kind, device,
-                  bool(interpret), canonical_sharding(sharding, len(shape)))
+                  bool(interpret), canonical_sharding(sharding, len(shape)),
+                  bool(grad))
     return _canonical_backend_name(key, method)
 
 
-def best_l1_method(n: int, dtype=jnp.float32, *, device: str | None = None) -> str:
+def best_l1_method(n: int, dtype=jnp.float32, *, device: str | None = None,
+                   grad: bool = False) -> str:
     """Autotuned θ-solver name for flat length-``n`` ℓ1 projections.
 
     Build-time helper for call sites that need a *generic* backend name (the
     sharded projection, the training hook): only ``core.ball`` registry
     methods compete, so the winner is always embeddable under an enclosing
-    jit/vmap/shard_map.
+    jit/vmap/shard_map. ``grad=True`` makes it a training key — the shoot-out
+    times each θ-solver under ``value_and_grad`` (solvers differ much more in
+    backward cost than forward: sort-based ones backprop through the sort).
     """
-    plan = make_plan((int(n),), dtype, [("1", 1)], method=AUTO, device=device)
+    plan = make_plan((int(n),), dtype, [("1", 1)], method=AUTO, device=device,
+                     grad=grad)
     return plan.method
 
 

@@ -21,9 +21,13 @@ golden kernels (``bilevel_l1inf.py`` / ``trilevel_l1infinf.py``) use, but for
   group), writing X. Y is read exactly twice end-to-end — the same
   information-theoretic minimum as the golden kernels.
 
-Reverse-mode: generated kernels carry a ``custom_vjp`` whose backward
-recomputes through the differentiable jnp schedule executor (exactly the
-``sort`` oracle's Jacobian) — a fused backward kernel is a ROADMAP item.
+Reverse-mode: generated kernels carry a ``custom_vjp`` whose backward is the
+*generated* residual VJP (``backward.py``): the forward pipeline already
+materializes every stage aggregate, the solved radii, and the projected
+output, so the backward is one streaming elementwise+group-reduction pass
+over (y, x, g) — the apply Jacobians are diagonal-plus-rank-one per group —
+with the tiny radii chain replayed on aggregate-sized tensors. No sort-oracle
+recompute, no ``schedule.execute`` call, no second reduce over ``y``.
 
 Serving buckets (B stacked items, per-item radii) lower through
 :func:`generate_batched` instead: the batch axis joins the Pallas grid as its
@@ -45,6 +49,7 @@ from repro.core import ball, schedule as sched_mod
 from repro.core.schedule import Schedule
 
 from .._compat import CompilerParams
+from . import backward as bwd_mod
 from .tiling import TilePlan, plan_tiles
 
 _GROUP_SOLVE_ITERS = 64  # in-tile grouped θ-solves: fixed-budget bisection
@@ -316,29 +321,41 @@ def generate(sched: Schedule, dtype, *, method: str = "bisect",
     norms = [q for q, _ in sched.levels]
 
     def raw(y, radius):
+        """Forward pipeline; also returns the VJP residual aggregates."""
         yc = y.reshape(tp.canon_shape)
         if len(norms) == 1:
             out = _solve_outer_vec(yc, norms[0], radius, method, interpret)
-            return out.reshape(y.shape)
+            return out.reshape(y.shape), ()
         aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
         vfin = MONOIDS[norms[-2]].finalize(acc)
         u = _solve_outer_vec(vfin, norms[-1], radius, method, interpret)
         x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
-        return x.reshape(y.shape)
+        return x.reshape(y.shape), (tuple(aggs), vfin, u)
 
     @jax.custom_vjp
     def fused(y, radius):
-        return raw(y, radius)
+        return raw(y, radius)[0]
 
     def fwd(y, radius):
-        return raw(y, radius), (y, radius)
+        x, internals = raw(y, radius)
+        return x, (y, x, internals, radius)
 
     def bwd(res, g):
-        y, radius = res
-        _, vjp = jax.vjp(
-            lambda yy, rr: sched_mod.execute(yy, sched, rr, method="sort"),
-            y, radius)
-        return vjp(g)
+        # the generated residual VJP (backward.py): one streaming pass over
+        # (y, x, g) + the aggregate-sized radii chain — the schedule executor
+        # is NEVER re-run (tests stub it out to prove that)
+        y, x, internals, radius = res
+        yc = y.reshape(tp.canon_shape)
+        gc = g.reshape(tp.canon_shape)
+        if len(norms) == 1:
+            stages = [yc]
+            u = x.reshape(tp.canon_shape)
+        else:
+            aggs, vfin, u = internals
+            stages = [yc, *aggs, vfin]
+        dy, dr = bwd_mod.schedule_vjp(norms, stages, u,
+                                      x.reshape(tp.canon_shape), radius, gc)
+        return dy.reshape(y.shape), jnp.asarray(dr, y.dtype)
 
     fused.defvjp(fwd, bwd)
 
@@ -521,31 +538,46 @@ def generate_batched(sched: Schedule, dtype, *, method: str = "bisect",
     norms = [q for q, _ in sched.levels]
 
     def raw(ys, radii):
+        """Forward pipeline; also returns the VJP residual aggregates."""
         batch = ys.shape[0]
         yc = ys.reshape((batch,) + tp.canon_shape)
         if len(norms) == 1:
             out = _solve_outer_batched(yc, norms[0], radii, method, interpret)
-            return out.reshape(ys.shape)
+            return out.reshape(ys.shape), ()
         aggs, acc = _reduce_call_batched(yc, tp, norms[:-1], interpret)
         vfin = MONOIDS[norms[-2]].finalize(acc)
         u = _solve_outer_batched(vfin, norms[-1], radii, method, interpret)
         x = _apply_call_batched(yc, aggs, vfin, u, tp, norms[:-1], interpret)
-        return x.reshape(ys.shape)
+        return x.reshape(ys.shape), (tuple(aggs), vfin, u)
 
     @jax.custom_vjp
     def fused(ys, radii):
-        return raw(ys, radii)
+        return raw(ys, radii)[0]
 
     def fwd(ys, radii):
-        return raw(ys, radii), (ys, radii)
+        x, internals = raw(ys, radii)
+        return x, (ys, x, internals, radii)
 
     def bwd(res, g):
-        ys, radii = res
-        _, vjp = jax.vjp(
-            lambda yy, rr: jax.vmap(
-                lambda y1, r1: sched_mod.execute(y1, sched, r1, method="sort")
-            )(yy, rr), ys, radii)
-        return vjp(g)
+        # per-item generated residual VJP, vmapped over the stacked batch —
+        # same no-re-execution property as the single-item path
+        ys, x, internals, radii = res
+        batch = ys.shape[0]
+        yc = ys.reshape((batch,) + tp.canon_shape)
+        xc = x.reshape((batch,) + tp.canon_shape)
+        gc = g.reshape((batch,) + tp.canon_shape)
+        if len(norms) == 1:
+            def item(y1, x1, g1, r1):
+                return bwd_mod.schedule_vjp(norms, [y1], x1, x1, r1, g1)
+            dy, dr = jax.vmap(item)(yc, xc, gc, radii)
+        else:
+            aggs, vfin, u = internals
+
+            def item(y1, aggs1, vfin1, u1, x1, g1, r1):
+                return bwd_mod.schedule_vjp(norms, [y1, *aggs1, vfin1],
+                                            u1, x1, r1, g1)
+            dy, dr = jax.vmap(item)(yc, aggs, vfin, u, xc, gc, radii)
+        return dy.reshape(ys.shape), dr.astype(radii.dtype)
 
     fused.defvjp(fwd, bwd)
 

@@ -31,7 +31,11 @@ _OUTER_METHOD = "bisect"
 
 def _codegen_available(key: planmod.PlanKey) -> bool:
     # single-device workloads only: a mesh-sharded key routes to the sharded
-    # schedule executor, not to a fused single-chip kernel
+    # schedule executor, not to a fused single-chip kernel.  Training keys
+    # (key.grad) are eligible too: the generated kernels carry a generated
+    # residual-VJP backward (kernels/codegen/backward.py) — no sort-oracle
+    # recompute — so for grad keys the autotuner times them under
+    # value_and_grad like any other candidate.
     if key.sharding is not None or not (key.device == "tpu" or key.interpret):
         return False
     return codegen.supported(key.shape, key.levels, key.dtype)

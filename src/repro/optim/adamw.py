@@ -108,21 +108,25 @@ def global_norm(tree):
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
-def update(grads, state, params, cfg: TrainConfig):
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
-    step = state["step"] + 1
+def grad_clip_factor(grads, cfg: TrainConfig):
+    """(gnorm, clip): the global-norm clip multiplier shared by both steps."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    return gnorm, clip
+
+
+def make_leaf_update(cfg: TrainConfig, step, clip=1.0):
+    """Build the per-leaf AdamW update ``one_leaf(g, m, v, p) -> (pnew, m', v')``
+    shared by :func:`update` and the fused projected step
+    (``optim/fused_step.py``). ``pnew`` comes back in f32 — casting to the
+    param/master dtype is the CALLER's epilogue, which is exactly what lets
+    the fused step slot the projection in *before* the cast."""
     lr = lr_schedule(step, cfg)
     b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
-
-    gnorm = global_norm(grads)
-    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
-        if cfg.grad_clip else 1.0
-
     quant = cfg.moment_dtype == "int8"
-    master = state.get("master")
-    src = master if master is not None else params
 
     def one(g, m, v, p):
         gf = g.astype(jnp.float32) * clip
@@ -151,6 +155,19 @@ def update(grads, state, params, cfg: TrainConfig):
             return jax.lax.map(lambda a: one(*a), (g, m, v, p))
         return one(g, m, v, p)
 
+    return one_leaf
+
+
+def update(grads, state, params, cfg: TrainConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm, clip = grad_clip_factor(grads, cfg)
+    one_leaf = make_leaf_update(cfg, step, clip)
+
+    quant = cfg.moment_dtype == "int8"
+    master = state.get("master")
+    src = master if master is not None else params
+
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_m = treedef.flatten_up_to(state["m"]) if quant else jax.tree_util.tree_leaves(state["m"])
     flat_v = treedef.flatten_up_to(state["v"]) if quant else jax.tree_util.tree_leaves(state["v"])
@@ -169,5 +186,5 @@ def update(grads, state, params, cfg: TrainConfig):
     else:
         new_params = jax.tree_util.tree_map(
             lambda x, p: x.astype(p.dtype), new_src, params)
-    metrics = {"grad_norm": gnorm, "lr": lr}
+    metrics = {"grad_norm": gnorm, "lr": lr_schedule(step, cfg)}
     return new_params, new_state, metrics

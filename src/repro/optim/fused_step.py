@@ -1,0 +1,129 @@
+"""Fused AdamW-update + multi-level-projection epilogue — one HBM pass.
+
+The unfused projected optimizer is three sweeps over every matched weight:
+``adamw.update`` writes p′, the projection hook reads p′ back and writes
+Π(p′), and the master-sync reads Π(p′) a third time.  The optimizer epilogue
+of LLM training is bandwidth-bound, so :func:`fused_update` does all of it
+per leaf in a single pass
+
+    dequant moments → AdamW math (f32) → **project (still f32)** → cast to
+    param dtype / master dtype → requant moments
+
+i.e. each matched parameter is read once and written once per direction.
+With :func:`make_fused_step`'s ``donate=True`` (the executor donation knob of
+``core.plan.make_plan``, applied to the optimizer) XLA reuses the incoming
+state/params buffers for the outputs, so peak HBM holds one live copy of the
+optimizer state instead of two.
+
+Numerics: the projection acts on the f32 *pre-cast* update — slightly tighter
+than the unfused hook, which projects the already-cast params.  On the
+f32/no-master path the sequence is operation-for-operation the unfused one
+(tests pin parity at 1e-6); the bf16 / int8-moment / master-dtype paths are
+pinned by a feasibility property instead: ‖W‖ ≤ radius·(1 + O(eps_dtype))
+after every fused step (``tests/test_fused_step.py``).
+
+The θ-solver resolution (including ``method="auto"`` via the planner's
+autotuner) reuses the projection hook's resolver, so a fused step and the
+standalone hook always agree on backends.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.types import ProjectionSpec, TrainConfig
+from repro.optim import adamw
+from repro.optim.projection_hook import (_method_resolver, _path_str,
+                                         _project_leaf)
+
+
+def fused_update(grads, state, params, cfg: TrainConfig,
+                 spec: ProjectionSpec | None = None):
+    """One fused AdamW+project step: ``(new_params, new_state, metrics)``.
+
+    Same contract as :func:`repro.optim.adamw.update`, but every leaf matching
+    ``spec.pattern`` is projected onto the multi-level ball BEFORE the
+    param/master casts — the fused read-once/write-once epilogue.  ``spec``
+    defaults to ``cfg.projection``; a disabled/absent spec degrades to a plain
+    AdamW step (same outputs as ``adamw.update``).
+    """
+    if spec is None:
+        spec = cfg.projection
+    on = spec is not None and spec.enabled
+    step = state["step"] + 1
+    gnorm, clip = adamw.grad_clip_factor(grads, cfg)
+    one_leaf = adamw.make_leaf_update(cfg, step, clip)
+
+    pat = re.compile(spec.pattern) if on else None
+    need = sum(k for _, k in spec.levels) if on else 0
+    resolve = _method_resolver(spec) if on else None
+
+    quant = cfg.moment_dtype == "int8"
+    master = state.get("master")
+    src = master if master is not None else params
+    mdtype = jnp.dtype(cfg.master_dtype) if master is not None else None
+
+    flat_pg, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    names = [_path_str(p) for p, _ in flat_pg]
+    flat_g = [g for _, g in flat_pg]
+    flat_m = treedef.flatten_up_to(state["m"]) if quant \
+        else jax.tree_util.tree_leaves(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"]) if quant \
+        else jax.tree_util.tree_leaves(state["v"])
+    flat_src = jax.tree_util.tree_leaves(src)
+    flat_prm = jax.tree_util.tree_leaves(params)
+
+    out_p, out_m, out_v, out_ms = [], [], [], []
+    for name, g, m, v, ps, p in zip(names, flat_g, flat_m, flat_v,
+                                    flat_src, flat_prm):
+        pnew, mq, vq = one_leaf(g, m, v, ps)
+        if on and pnew.ndim >= need and pat.search(name):
+            # materialize the updated leaf once before the projection reads
+            # it twice (aggregate reduce + apply): without the barrier XLA
+            # fuses the whole update chain into BOTH consumers and computes
+            # it twice — costing more than the dispatch the fusion saves
+            pnew = jax.lax.optimization_barrier(pnew)
+            method = resolve(pnew.shape, pnew.dtype)
+
+            def proj(x, _m=method):
+                return _project_leaf(x, spec.levels, spec.radius, _m,
+                                     transpose=spec.transpose)
+
+            if spec.every > 1:
+                # per-leaf cond: off-cycle steps skip the projection math but
+                # keep the single-pass write
+                pnew = jax.lax.cond(step % spec.every == 0, proj,
+                                    lambda x: x, pnew)
+            else:
+                pnew = proj(pnew)
+        out_p.append(pnew.astype(p.dtype))
+        if master is not None:
+            out_ms.append(pnew.astype(mdtype))
+        out_m.append(mq)
+        out_v.append(vq)
+
+    new_state = {"step": step, "m": treedef.unflatten(out_m),
+                 "v": treedef.unflatten(out_v)}
+    if master is not None:
+        new_state["master"] = treedef.unflatten(out_ms)
+    metrics = {"grad_norm": gnorm, "lr": adamw.lr_schedule(step, cfg)}
+    return treedef.unflatten(out_p), new_state, metrics
+
+
+def make_fused_step(cfg: TrainConfig, spec: ProjectionSpec | None = None, *,
+                    donate: bool = True):
+    """Jitted single-dispatch entry ``step(grads, state, params)``.
+
+    ``donate=True`` donates the incoming optimizer state and params (they are
+    dead after the step) so XLA writes the outputs in place — the epilogue's
+    HBM traffic is then exactly one read + one write of each leaf.
+    """
+    def step_fn(grads, state, params):
+        return fused_update(grads, state, params, cfg, spec)
+
+    if donate:
+        return jax.jit(step_fn, donate_argnums=(1, 2))
+    return jax.jit(step_fn)

@@ -7,9 +7,16 @@ per-layer remat (inside the models), AdamW, and the paper's projection hook.
 
   state = {"params", "opt", } ; batch = {"tokens": (n_micro, mb, S)}
 
-Loss is next-token CE computed with a one-hot einsum (vocab-sharding
-friendly: the logsumexp partial-reduces over the sharded vocab axis and the
-target logit is a sharded dot — no cross-shard gather).
+Loss is next-token CE computed with ``take_along_axis`` (vocab-sharding
+friendly: the logsumexp partial-reduces over the sharded vocab axis and GSPMD
+lowers the target-logit gather to a masked local gather + all-reduce — see
+``xent``; no (B,S,V) one-hot is ever materialized).
+
+When projection is enabled and the step is not mesh-native, the optimizer
+epilogue runs FUSED (``optim/fused_step.py``): AdamW update, multi-level
+projection, and the param/master casts execute in one pass per matched leaf
+instead of three separate sweeps (``fused="auto"`` — force with
+``fused=True/False``).
 """
 
 from __future__ import annotations
@@ -21,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.types import ArchConfig, TrainConfig
-from repro.optim import adamw
+from repro.optim import adamw, fused_step
 from repro.optim.projection_hook import make_projection_hook
 
 
@@ -62,17 +69,31 @@ def make_loss_fn(cfg: ArchConfig, api, *, impl: str, n_groups: int,
 def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
                     impl: str = "chunked", n_groups: int = 1,
                     act_spec=None, logits_spec=None,
-                    mesh=None, param_specs=None) -> Callable:
+                    mesh=None, param_specs=None,
+                    fused: bool | str = "auto") -> Callable:
     compute_dtype = jnp.dtype(tcfg.compute_dtype)
     loss_fn = make_loss_fn(cfg, api, impl=impl, n_groups=n_groups,
                            remat=tcfg.remat, compute_dtype=compute_dtype,
                            act_spec=act_spec, logits_spec=logits_spec)
+    # single-pass epilogue: AdamW-update → project → cast fused per leaf
+    # (optim/fused_step.py). "auto" = fused whenever projection is on and we
+    # are not mesh-native (the sharded executor path keeps the hook, whose
+    # shard_map placement the fused loop does not replicate yet).
+    projecting = tcfg.projection is not None and tcfg.projection.enabled
+    if fused == "auto":
+        use_fused = projecting and mesh is None
+    else:
+        use_fused = bool(fused)
+        if use_fused and mesh is not None:
+            raise ValueError("fused=True is single-device/GSPMD only — the "
+                             "mesh-native projection path needs fused='auto' "
+                             "or fused=False")
     # plan the projection ONCE at step-build time (regex + backend resolution,
     # incl. method="auto" autotuning) — the per-step call is just the math.
     # mesh + param_specs make it mesh-native: sharded leaves project in place
     # under shard_map instead of relying on GSPMD (DESIGN.md §3)
-    project = make_projection_hook(tcfg.projection, mesh=mesh,
-                                   param_specs=param_specs)
+    project = None if use_fused else make_projection_hook(
+        tcfg.projection, mesh=mesh, param_specs=param_specs)
 
     def train_step(state, batch):
         params = state["params"]
@@ -96,16 +117,21 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
         grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
         loss = loss_sum / n_micro
 
-        new_params, new_opt, metrics = adamw.update(grads, state["opt"], params,
-                                                    tcfg)
-        # the paper's constraint: project back onto the norm ball
-        new_params = project(new_params, new_opt["step"])
-        # keep the master copy consistent with the projected params
-        if "master" in new_opt and tcfg.projection is not None \
-                and tcfg.projection.enabled:
-            new_opt = dict(new_opt)
-            new_opt["master"] = jax.tree_util.tree_map(
-                lambda p, m: p.astype(m.dtype), new_params, new_opt["master"])
+        if use_fused:
+            # one pass per leaf: update → project (f32) → cast param/master
+            new_params, new_opt, metrics = fused_step.fused_update(
+                grads, state["opt"], params, tcfg)
+        else:
+            new_params, new_opt, metrics = adamw.update(grads, state["opt"],
+                                                        params, tcfg)
+            # the paper's constraint: project back onto the norm ball
+            new_params = project(new_params, new_opt["step"])
+            # keep the master copy consistent with the projected params
+            if "master" in new_opt and projecting:
+                new_opt = dict(new_opt)
+                new_opt["master"] = jax.tree_util.tree_map(
+                    lambda p, m: p.astype(m.dtype), new_params,
+                    new_opt["master"])
         metrics = dict(metrics, loss=loss)
         return {"params": new_params, "opt": new_opt}, metrics
 

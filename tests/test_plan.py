@@ -251,3 +251,61 @@ class TestDonationAndBatchNative:
             plan.validate_backend((8, 16), jnp.float32, BILEVEL,
                                   "codegen_batch", interpret=True,
                                   radius_kind="scalar")
+
+
+class TestTrainingGradKeys:
+    """grad=True plan keys: the autotuner times value_and_grad, verdicts are
+    cached separately from forward keys, and the generated-kernel backend
+    (which now carries its own backward) is eligible for them."""
+
+    def test_grad_key_is_distinct_and_differentiable(self):
+        fwd = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="auto")
+        trn = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="auto",
+                             grad=True)
+        assert fwd is not trn
+        assert fwd.key.grad is False and trn.key.grad is True
+        assert trn.method in ball.available_methods()
+        assert set(trn.timings_us) >= set(ball.available_methods())
+        # the plan executable stays differentiable (it IS the forward)
+        y = _rand((6, 10), seed=30)
+        g = jax.grad(lambda v: jnp.sum(trn._exec.fn(v, jnp.float32(1.5)) ** 2))(y)
+        assert np.all(np.isfinite(g))
+
+    def test_grad_verdict_cached_per_key(self):
+        a = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="auto",
+                           grad=True)
+        b = plan.make_plan((6, 10), jnp.float32, BILEVEL, method="auto",
+                           grad=True)
+        assert a is b
+        info = plan.cache_info()
+        assert info["auto_winners"] >= 1
+
+    def test_codegen_eligible_for_grad_keys(self):
+        # fixed-backend grad key: codegen builds, and differentiating through
+        # the plan matches the sort oracle (the generated backward)
+        p = plan.make_plan((16, 130), jnp.float32, BILEVEL, method="codegen",
+                           interpret=True, grad=True)
+        y = _rand((16, 130), seed=31)
+        got = jax.grad(lambda v: jnp.sum(p._exec.fn(v, jnp.float32(1.0)) ** 2))(y)
+        want = jax.grad(lambda v: jnp.sum(multilevel.multilevel_project(
+            v, BILEVEL, 1.0, method="sort") ** 2))(y)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_plankey_positional_backcompat(self):
+        # the grad field is trailing + defaulted: pre-existing positional
+        # constructions (tests, serving) must keep meaning grad=False
+        key = plan.PlanKey((16, 32), "float32", (("inf", 1), ("1", 1)),
+                           "scalar", "cpu")
+        assert key.grad is False and key.interpret is False
+
+    def test_best_l1_method_grad(self):
+        m = plan.best_l1_method(64, jnp.float32, grad=True)
+        assert m in ball.available_methods()
+
+    def test_sharded_backend_excluded_from_grad_keys(self):
+        # _sharded_available gates grad keys out (mesh training keeps the hook)
+        key = plan.PlanKey((8, 16), "float32", (("inf", 1), ("1", 1)),
+                           "scalar", "cpu", False,
+                           plan.ShardingKey((("d", 2),), (0, 1), (None, "d")),
+                           True)
+        assert not plan._SPECIALIZED["sharded"].available(key)
