@@ -33,6 +33,7 @@ _JSON_NAMES = {
     "serving": "BENCH_serving_latency.json",
     "train": "BENCH_train_step.json",
     "sae": "BENCH_sae_tables.json",
+    "sae_factory": "BENCH_sae_factory.json",
 }
 
 
@@ -59,7 +60,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
-                         "sharded,codegen,serving,train,sae")
+                         "sharded,codegen,serving,train,sae,sae_factory")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -67,7 +68,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
-    from . import projections, sae_tables, serving_trace, train_step
+    from . import projections, sae_factory, sae_tables, serving_trace, train_step
 
     sections = {
         "fig1": lambda: projections.fig1_radius(full=args.full),
@@ -82,6 +83,7 @@ def main(argv=None) -> None:
         "train": lambda: train_step.train_sweep(full=args.full),
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
+        "sae_factory": lambda: sae_factory.factory_sweep(full=args.full),
     }
     unknown = only - set(sections)
     if unknown:

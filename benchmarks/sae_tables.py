@@ -68,7 +68,15 @@ def _accuracy(params, cfg, x, y):
     return float(jnp.mean((jnp.argmax(z, -1) == jnp.asarray(y)).astype(jnp.float32)) * 100)
 
 
-def run_dataset(name, x, y, *, radius, epochs=150, lr=3e-3, seed=0):
+def run_dataset(name, x, y, *, radius, epochs=150, lr=3e-3, seed=0,
+                prefix="sae", rewind=True, only=None):
+    """5-method sweep on one dataset; rows ``(prefix_name_method, µs, derived)``.
+
+    ``rewind=False`` runs the no-rewind double-descent ablation (descent #2
+    fine-tunes the projected weights); ``only`` restricts to a subset of
+    method names. The SAE-factory bench reuses this with ``prefix=
+    "sae_factory"`` so its artifact rows don't collide with BENCH_sae_tables.
+    """
     cfg_base = registry.get_arch("sae-paper")
     import dataclasses
     cfg = dataclasses.replace(cfg_base, d_model=x.shape[1])
@@ -93,6 +101,8 @@ def run_dataset(name, x, y, *, radius, epochs=150, lr=3e-3, seed=0):
     }
     rows = []
     for mname, kw in methods.items():
+        if only is not None and mname not in only:
+            continue
         key = jax.random.PRNGKey(seed)
         init = PM.init_params(sae.template(cfg), key)
         fn = _train_fn(cfg, xtr, ytr, epochs=epochs, lr=lr, **kw)
@@ -107,11 +117,12 @@ def run_dataset(name, x, y, *, radius, epochs=150, lr=3e-3, seed=0):
                 projector = lambda p: dict(p, enc1=dict(
                     p["enc1"],
                     w=project_l1inf_exact(p["enc1"]["w"].T, kw["exact_radius"]).T))
-            final, _, _ = double_descent(init, fn, spec, projector=projector)
+            final, _, _ = double_descent(init, fn, spec, projector=projector,
+                                         rewind=rewind)
         dt = time.perf_counter() - t0
         acc = _accuracy(final, cfg, xte, yte)
         sp = float(sparsity(final["enc1"]["w"], axis=1))
-        rows.append((f"sae_{name}_{mname}", dt * 1e6,
+        rows.append((f"{prefix}_{name}_{mname}", dt * 1e6,
                      f"acc={acc:.1f}%_colsparsity={sp:.1f}%"))
     return rows
 

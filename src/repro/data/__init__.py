@@ -3,3 +3,6 @@ from .pipeline import (  # noqa: F401
     DataConfig, DataPipeline, TokenFileReader, classification_synthetic,
     lung_like,
 )
+from .activations import (  # noqa: F401
+    ActivationReader, HarvestConfig, harvest, read_meta,
+)

@@ -62,17 +62,35 @@ VARIANTS = {
     # beyond-paper for the deepseek prefill dispatch blow-up
     "deepseek_scatter": ("deepseek-v3-671b", "train_4k",
                          dict(moe_dispatch="scatter")),
+    # GSP-style whole-network sparsification: EVERY ≥2D weight projected per
+    # step (attention, embeddings, vocab head — not just the MLP). Roofline
+    # delta vs stablelm_proj_all = the marginal collective cost of the
+    # remaining leaves through the mesh executor.
+    "stablelm_gsp_all": ("stablelm-1.6b", "train_4k",
+                         dict(projection_pattern=r".*")),
+    # the SAE factory's own train cell (specs.sae_factory_cell): d_model=2048
+    # activations in, 8× overcomplete dictionary, encoder projected per step
+    "sae_factory": ("sae_factory", "train_4k", dict()),
 }
+
+
+def _sae_factory_cell(mesh):
+    return SP.sae_factory_cell(2048, mesh, expansion=8,
+                               batch=4096, microbatch=512)
 
 
 def run_variant(name, out_dir):
     arch, shape_name, overrides = VARIANTS[name]
-    cfg = registry.get_arch(arch)
-    shape = SHAPES[shape_name]
-    tune = dataclasses.replace(SP.tuning_for(cfg), **overrides)
     mesh = make_production_mesh()
     t0 = time.time()
-    cell = SP.build_cell(cfg, shape, mesh, tune=tune)
+    if arch == "sae_factory":
+        shape = SHAPES[shape_name]
+        cell = _sae_factory_cell(mesh)
+    else:
+        cfg = registry.get_arch(arch)
+        shape = SHAPES[shape_name]
+        tune = dataclasses.replace(SP.tuning_for(cfg), **overrides)
+        cell = SP.build_cell(cfg, shape, mesh, tune=tune)
     with mesh:
         jitted = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
                          out_shardings=cell["out_shardings"],

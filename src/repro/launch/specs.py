@@ -234,6 +234,54 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
                 out_shardings=out_sh, tcfg=None, donate=())
 
 
+def sae_factory_cell(d_model: int, mesh, *, expansion: int = 8,
+                     batch: int = 4096, microbatch: int = 512,
+                     radius: float = 1.0):
+    """The factory's projected dictionary-SAE train step as a lowerable cell.
+
+    Activation rows stream in (n_micro, mb, d_model); the encoder weight
+    ((d_model, expansion*d_model), 'ffn'-sharded over 'model') is projected
+    onto the bi-level ball every step — through the §3 mesh executor when its
+    trailing axis is sharded, so the dry-run/roofline sees the factory's real
+    collective cost at production batch sizes.
+    """
+    from repro.models import sae
+    from repro.training import sae_factory as F
+
+    d_dict = expansion * d_model
+    fcfg = F.SAEFactoryConfig(expansion=expansion, radius=radius,
+                              microbatch=microbatch, sae_batch=batch)
+    tcfg = F.sae_train_config(fcfg)
+    tpl = sae.dict_template(d_model, d_dict)
+    pspecs = PM.param_specs(tpl, SH.param_rules(mesh, fsdp=True),
+                            SH.mesh_shape_dict(mesh))
+    params = PM.abstract_params(tpl, jnp.dtype(tcfg.param_dtype))
+    ospecs = adamw.state_specs(pspecs, tpl, tcfg)
+    state = {"params": params, "opt": {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+        "v": jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+    }}
+    n_micro = batch // microbatch
+    b_ax = SH.batch_spec(mesh, microbatch, extra_dims=0)
+    rows_spec = P(None, b_ax[0] if len(b_ax) else None, None)
+    batch_ab = {"tokens": jax.ShapeDtypeStruct((n_micro, microbatch, d_model),
+                                               jnp.float32)}
+    step_fn = F.make_sae_train_step(tcfg, mesh=mesh, param_specs=pspecs)
+    state_sh = SH.named(mesh, {"params": pspecs, "opt": ospecs})
+    metrics_sh = SH.named(mesh, {"loss": P(), "grad_norm": P(), "lr": P()})
+    return dict(
+        fn=step_fn,
+        args=(state, batch_ab),
+        in_shardings=(state_sh, SH.named(mesh, {"tokens": rows_spec})),
+        out_shardings=(state_sh, metrics_sh),
+        tcfg=tcfg,
+        donate=(0,),
+    )
+
+
 def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, tune=None):
     if shape.kind == "train":
         return train_cell(cfg, shape, mesh, tune=tune)

@@ -241,7 +241,8 @@ def _attn_mla_decode(lp, h, cfg: ArchConfig, *, pos, cache):
 
 
 # --------------------------------------------------------------------- blocks
-def _block(lp, x, cfg: ArchConfig, *, moe: bool, positions, impl, n_groups):
+def _block(lp, x, cfg: ArchConfig, *, moe: bool, positions, impl, n_groups,
+           collect=None):
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
         a, _ = _attn_mla(lp["attn"], h, cfg, positions=positions, impl=impl,
@@ -258,54 +259,75 @@ def _block(lp, x, cfg: ArchConfig, *, moe: bool, positions, impl, n_groups):
         y = y.reshape(b, s, d)
     else:
         y, aux = L.mlp_apply(lp["mlp"], h2, cfg.act), 0.0
-    return x + y, aux
+    out = x + y
+    # harvest sites (data/activations.py): the post-block residual stream or
+    # the MLP branch output (pre-residual-add) — the two streams SAEs are
+    # trained on in the interpretability literature
+    cap = None if collect is None else (out if collect == "resid" else y)
+    return out, aux, cap
 
 
-def _scan_blocks(blocks, x, cfg, *, moe, positions, impl, n_groups, remat=True):
+def _scan_blocks(blocks, x, cfg, *, moe, positions, impl, n_groups, remat=True,
+                 collect=None):
     def body(carry, lp):
         x, aux = carry
         fn = functools.partial(_block, cfg=cfg, moe=moe, positions=positions,
-                               impl=impl, n_groups=n_groups)
+                               impl=impl, n_groups=n_groups, collect=collect)
         if remat:
             fn = jax.checkpoint(fn)
-        y, a = fn(lp, x)
-        return (y, aux + a), None
+        y, a, cap = fn(lp, x)
+        return (y, aux + a), cap
 
-    (x, aux), _ = jax.lax.scan(body, (x, 0.0), blocks)
-    return x, aux
+    (x, aux), caps = jax.lax.scan(body, (x, 0.0), blocks)
+    return x, aux, caps
 
 
 def forward(params, tokens, cfg: ArchConfig, *, impl="chunked", n_groups=1,
-            remat=True, act_spec=None):
+            remat=True, act_spec=None, collect=None):
     """tokens (B, S) int32 -> logits (B, S, V). aux returned for MoE balance.
 
     ``act_spec``: PartitionSpec for (B, S, D) activations. The embedding
     gather otherwise inherits the table's FSDP sharding (batch replicated!) —
     constraining here pins activations to batch-sharded layout for the whole
-    stack (see EXPERIMENTS.md §Perf, stablelm iteration 0)."""
+    stack (see EXPERIMENTS.md §Perf, stablelm iteration 0).
+
+    ``collect``: None | "resid" | "mlp" — when set, also return the per-layer
+    activations stacked on a leading layer axis, shape (L, B, S, D): the
+    post-block residual stream or the MLP branch output. This is the capture
+    point of the SAE activation-harvesting stage (data/activations.py);
+    ``remat`` is usually off for harvesting (no backward pass)."""
     b, s = tokens.shape
     x = params["embed"][tokens].astype(params["final_norm"].dtype)
     if act_spec is not None:
         x = jax.lax.with_sharding_constraint(x, act_spec)
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     aux = 0.0
+    caps = []
     if cfg.moe is not None:
         if cfg.moe.first_dense:
-            x, a1 = _scan_blocks(params["dense_blocks"], x, cfg, moe=False,
-                                 positions=positions, impl=impl,
-                                 n_groups=n_groups, remat=remat)
+            x, a1, c1 = _scan_blocks(params["dense_blocks"], x, cfg, moe=False,
+                                     positions=positions, impl=impl,
+                                     n_groups=n_groups, remat=remat,
+                                     collect=collect)
             aux += a1
-        x, a2 = _scan_blocks(params["moe_blocks"], x, cfg, moe=True,
-                             positions=positions, impl=impl,
-                             n_groups=n_groups, remat=remat)
+            caps.append(c1)
+        x, a2, c2 = _scan_blocks(params["moe_blocks"], x, cfg, moe=True,
+                                 positions=positions, impl=impl,
+                                 n_groups=n_groups, remat=remat,
+                                 collect=collect)
         aux += a2
+        caps.append(c2)
     else:
-        x, _ = _scan_blocks(params["blocks"], x, cfg, moe=False,
-                            positions=positions, impl=impl,
-                            n_groups=n_groups, remat=remat)
+        x, _, c = _scan_blocks(params["blocks"], x, cfg, moe=False,
+                               positions=positions, impl=impl,
+                               n_groups=n_groups, remat=remat, collect=collect)
+        caps.append(c)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     un = params.get("unembed")
     logits = x @ un if un is not None else x @ params["embed"].T
+    if collect is not None:
+        acts = caps[0] if len(caps) == 1 else jnp.concatenate(caps, axis=0)
+        return logits, aux, acts
     return logits, aux
 
 

@@ -57,3 +57,54 @@ def loss_fn(params, batch, cfg: ArchConfig, *, alpha: float = 1.0,
     logp = jax.nn.log_softmax(z.astype(jnp.float32))
     ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
     return alpha * rec + ce, {"rec": rec, "ce": ce}
+
+
+# ------------------------------------------------------- activation-dictionary
+# The factory's SAE (training/sae_factory.py): a one-hidden-layer dictionary
+# autoencoder trained on harvested LM activations (data/activations.py).
+# Unlike the L1-penalty SAEs of the interpretability literature, sparsity here
+# is the paper's HARD constraint: the encoder weight is projected onto the
+# l1,inf (or tri-level) ball every optimizer step, zeroing whole feature
+# columns. The decoder weight is the learned dictionary compared across runs
+# with MMCS (training/mmcs.py).
+
+def dict_template(d_in: int, d_dict: int):
+    """Params for the activation SAE: encode d_in -> d_dict, decode back."""
+    return {
+        "enc": {"w": ParamDef((d_in, d_dict), ("embed", "ffn"), "scaled"),
+                "b": ParamDef((d_dict,), (None,), "zeros")},
+        "dec": {"w": ParamDef((d_dict, d_in), ("ffn", "embed"), "scaled"),
+                "b": ParamDef((d_in,), (None,), "zeros")},
+    }
+
+
+def dict_forward(params, x):
+    """x (B, d_in) -> (features (B, d_dict), reconstruction (B, d_in)).
+
+    Pre-bias form (x is decoder-bias-centred before encoding), ReLU features.
+    """
+    xc = x - params["dec"]["b"]
+    f = jax.nn.relu(xc @ params["enc"]["w"] + params["enc"]["b"])
+    xr = f @ params["dec"]["w"] + params["dec"]["b"]
+    return f, xr
+
+
+def dict_loss(params, x, *, l1: float = 0.0):
+    """Scalar reconstruction loss (+ optional L1 on features, default OFF —
+    the paper's projection constraint replaces the penalty)."""
+    f, xr = dict_forward(params, x)
+    mse = jnp.mean(jnp.square(x - xr))
+    if l1:
+        mse = mse + l1 * jnp.mean(jnp.abs(f))
+    return mse
+
+
+def dict_metrics(params, x):
+    """Diagnostics: reconstruction MSE, mean feature L0, fraction dead."""
+    f, xr = dict_forward(params, x)
+    active = (f > 0).astype(jnp.float32)
+    return {
+        "mse": jnp.mean(jnp.square(x - xr)),
+        "l0": jnp.mean(jnp.sum(active, axis=-1)),
+        "dead_frac": jnp.mean((jnp.max(active, axis=0) == 0).astype(jnp.float32)),
+    }

@@ -19,12 +19,15 @@ from repro.optim.projection_hook import project_tree
 
 
 def double_descent(init_params, train_epochs_fn: Callable, spec: ProjectionSpec,
-                   projector: Callable = None):
+                   projector: Callable = None, rewind: bool = True):
     """Run the two descents (paper Alg 8: project ONCE after descent #1).
 
     ``train_epochs_fn(params, mask_or_None) -> trained_params`` encapsulates
     one full descent (the caller owns optimizer/loop). ``projector`` overrides
-    the mask-inducing projection (e.g. the exact ℓ1,∞ baseline). Returns
+    the mask-inducing projection (e.g. the exact ℓ1,∞ baseline).
+    ``rewind=False`` is the fine-tuning ablation: descent #2 continues from
+    the PROJECTED weights instead of masked initialization (no lottery-ticket
+    rewind — the SAE factory sweep reports both). Returns
     (final_params, mask_tree, sparsity_per_leaf).
     """
     # descent 1 — unconstrained
@@ -34,8 +37,10 @@ def double_descent(init_params, train_epochs_fn: Callable, spec: ProjectionSpec,
         else project_tree(trained, spec)
     mask = jax.tree_util.tree_map(
         lambda p: (jnp.abs(p) > 0).astype(p.dtype), projected)
-    # rewind: surviving weights restart from initialization (masked)
-    rewound = jax.tree_util.tree_map(lambda w0, m: w0 * m, init_params, mask)
+    # rewind: surviving weights restart from initialization (masked);
+    # no-rewind: keep the projected weights and fine-tune under the mask
+    start = init_params if rewind else projected
+    rewound = jax.tree_util.tree_map(lambda w0, m: w0 * m, start, mask)
     # descent 2 — masked retrain
     final = train_epochs_fn(rewound, mask)
     stats = {}

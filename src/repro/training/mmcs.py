@@ -1,0 +1,65 @@
+"""Mean Max Cosine Similarity — comparing learned SAE dictionaries.
+
+MMCS is the standard dictionary-recovery metric for sparse autoencoders:
+for every feature (column) of dictionary ``A``, find its best-matching
+feature in ``B`` by absolute cosine similarity and average the matches,
+
+    MMCS(A, B) = mean_i max_j |cos(a_i, b_j)|.
+
+``|cos|`` makes the score invariant to per-feature sign flips, and the
+max-over-columns makes it invariant to feature permutation — the two gauge
+freedoms of a learned dictionary. The directional form is NOT symmetric when
+the dictionaries differ (every A-feature finds a neighbour in B, not vice
+versa); ``mmcs_sym`` averages both directions for a symmetric score. The
+factory uses it to compare dictionaries across seeds/models/layers
+(training/sae_factory.py), as the companion works do across RLHF'd vs base
+models.
+
+All functions accept dictionaries as ``(d, k)`` arrays: columns are features
+(the decoder weight of models/sae.py's ``dict_template`` is ``(k, d)`` —
+pass ``W.T``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _unit_columns(a, eps):
+    n = jnp.linalg.norm(a, axis=0, keepdims=True)
+    return a / jnp.maximum(n, eps)
+
+
+def mmcs(a, b, *, eps: float = 1e-9):
+    """Directional MMCS(A, B): mean over A's columns of the best |cos| in B.
+
+    ``a`` (d, ka), ``b`` (d, kb) — any float dtypes; computed in f32.
+    Invariances: column permutation of either argument, per-column sign
+    flips, per-column positive rescaling. MMCS(A, A) == 1 exactly (each
+    column's best match is itself). Zero columns match nothing (their row of
+    cosines is 0), dragging the mean down instead of poisoning it with NaNs.
+    """
+    a = _unit_columns(jnp.asarray(a, jnp.float32), eps)
+    b = _unit_columns(jnp.asarray(b, jnp.float32), eps)
+    cos = jnp.abs(a.T @ b)                     # (ka, kb)
+    return jnp.mean(jnp.max(cos, axis=1))
+
+
+def mmcs_sym(a, b, *, eps: float = 1e-9):
+    """Symmetrized MMCS: (MMCS(A,B) + MMCS(B,A)) / 2."""
+    return 0.5 * (mmcs(a, b, eps=eps) + mmcs(b, a, eps=eps))
+
+
+def mmcs_table(dicts: dict, *, eps: float = 1e-9) -> dict:
+    """Pairwise symmetric MMCS across named dictionaries.
+
+    ``dicts`` maps run/model names to (d, k) arrays; returns
+    ``{(name_i, name_j): float}`` for i < j in insertion order — the
+    cross-run comparison grid of the factory's sweep reports.
+    """
+    names = list(dicts)
+    out = {}
+    for i, ni in enumerate(names):
+        for nj in names[i + 1:]:
+            out[(ni, nj)] = float(mmcs_sym(dicts[ni], dicts[nj], eps=eps))
+    return out

@@ -70,11 +70,21 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
                     impl: str = "chunked", n_groups: int = 1,
                     act_spec=None, logits_spec=None,
                     mesh=None, param_specs=None,
-                    fused: bool | str = "auto") -> Callable:
+                    fused: bool | str = "auto",
+                    loss_fn: Callable = None) -> Callable:
+    """Build the jitted projected train step (see module docstring).
+
+    ``loss_fn(params, microbatch) -> scalar`` overrides the default LM
+    next-token CE — the SAE factory passes the dictionary reconstruction loss
+    and streams (n_micro, mb, d_model) activation batches through the same
+    grad-accumulation scan, fused AdamW+project epilogue included
+    (``batch["tokens"]`` is the per-step data leaf whatever its dtype/rank).
+    """
     compute_dtype = jnp.dtype(tcfg.compute_dtype)
-    loss_fn = make_loss_fn(cfg, api, impl=impl, n_groups=n_groups,
-                           remat=tcfg.remat, compute_dtype=compute_dtype,
-                           act_spec=act_spec, logits_spec=logits_spec)
+    if loss_fn is None:
+        loss_fn = make_loss_fn(cfg, api, impl=impl, n_groups=n_groups,
+                               remat=tcfg.remat, compute_dtype=compute_dtype,
+                               act_spec=act_spec, logits_spec=logits_spec)
     # single-pass epilogue: AdamW-update → project → cast fused per leaf
     # (optim/fused_step.py). "auto" = fused whenever projection is on and we
     # are not mesh-native (the sharded executor path keeps the hook, whose

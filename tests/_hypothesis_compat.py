@@ -1,0 +1,96 @@
+"""Deterministic stand-in for the ``hypothesis`` API used by the property
+tests, so they RUN (instead of module-skipping) in containers without the
+package installed.
+
+Implements just the surface the tests use — ``given``, ``settings``, and the
+``st.integers / floats / sampled_from / lists`` strategies. Each decorated
+test is executed for a deterministic sample of examples: the RNG is seeded
+from CRC32(test qualname, example index), so failures reproduce exactly
+across runs and machines (no hypothesis-style shrinking, but also no flake).
+``HYPOTHESIS_COMPAT_EXAMPLES`` caps examples per test (default 10) to keep
+the tier-1 suite fast; with real hypothesis installed the tests import it
+instead and this module is unused.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+
+_EXAMPLE_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_EXAMPLES", "10"))
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(min_value + (max_value - min_value) * rng.random()))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(size)]
+        return _Strategy(sample)
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies_by_name):
+    def deco(fn):
+        import inspect
+
+        n_examples = min(getattr(fn, "_compat_max_examples", 10), _EXAMPLE_CAP)
+
+        def wrapper(*args, **fixtures):
+            for i in range(n_examples):
+                seed = zlib.crc32(f"{fn.__qualname__}:{i}".encode())
+                rng = np.random.default_rng(seed)
+                drawn = {k: s.sample(rng)
+                         for k, s in strategies_by_name.items()}
+                try:
+                    fn(*args, **fixtures, **drawn)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__} "
+                        f"example {i}): {drawn}") from e
+            return None
+
+        # expose only the NON-strategy params (self, pytest fixtures) so
+        # pytest resolves those as fixtures and never sees the strategy
+        # names (no functools.wraps — inspect.signature would follow
+        # __wrapped__ back to the full parameter list).
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategies_by_name]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+st = strategies

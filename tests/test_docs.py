@@ -12,7 +12,8 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # markdown files whose ```python blocks must execute cleanly, in order
-EXECUTABLE_DOCS = ["docs/api.md", "docs/serving.md", "README.md"]
+EXECUTABLE_DOCS = ["docs/api.md", "docs/serving.md", "docs/sae.md",
+                   "README.md"]
 
 # modules whose docstring ``>>>`` examples must pass (and exist)
 DOCTEST_MODULES = ["repro.core.plan"]

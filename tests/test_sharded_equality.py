@@ -24,6 +24,9 @@ import pytest
 
 from jax.sharding import PartitionSpec as P
 
+# legitimately environment-gated: XLA device count is fixed at interpreter
+# start, so a 1-device tier-1 host CANNOT run these in-process (the subprocess
+# class below covers the same checks there); the `mesh` CI job runs them.
 multi_device = pytest.mark.skipif(
     jax.device_count() < 8,
     reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
