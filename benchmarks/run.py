@@ -30,6 +30,7 @@ _JSON_NAMES = {
     "plan": "BENCH_projection_plan.json",
     "sharded": "BENCH_sharded_multilevel.json",
     "codegen": "BENCH_codegen_kernels.json",
+    "sharded_codegen": "BENCH_sharded_codegen.json",
     "serving": "BENCH_serving_latency.json",
     "train": "BENCH_train_step.json",
     "sae": "BENCH_sae_tables.json",
@@ -60,7 +61,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
-                         "sharded,codegen,serving,train,sae,sae_factory")
+                         "sharded,codegen,sharded_codegen,serving,train,sae,"
+                         "sae_factory")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -79,6 +81,8 @@ def main(argv=None) -> None:
         "plan": lambda: projections.plan_sweep(full=args.full),
         "sharded": lambda: projections.sharded_sweep(full=args.full),
         "codegen": lambda: projections.codegen_sweep(full=args.full),
+        "sharded_codegen":
+            lambda: projections.sharded_codegen_sweep(full=args.full),
         "serving": lambda: serving_trace.serving_sweep(full=args.full),
         "train": lambda: train_step.train_sweep(full=args.full),
         "fig4": projections.fig4_parallel,

@@ -81,8 +81,24 @@ def _factory_rows(full):
     rec = out["layers"][0]
     mmcs = rec["mmcs"]["seed0_vs_seed1"]
     mse = rec["metrics"][0]["mse"]
-    return [("sae_factory_pipeline_layer0", dt * 1e6,
+    rows = [("sae_factory_pipeline_layer0", dt * 1e6,
              f"mmcs={mmcs:.3f}_mse={mse:.4f}")]
+    # head-structured variant (§6): 3-D encoder, tri-level l1,inf,inf ball
+    hcfg = F.SAEFactoryConfig(
+        layers=(0,), harvest_steps=4 if full else 2,
+        train_steps=60 if full else 12, sae_batch=64, microbatch=32,
+        expansion=4 if full else 2, radius=0.5, heads=2)
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        out = F.run_factory(hcfg, d, seeds=(0, 1))
+        dt = time.perf_counter() - t0
+    rec = out["layers"][0]
+    mmcs = rec["mmcs"]["seed0_vs_seed1"]
+    mse = rec["metrics"][0]["mse"]
+    rows.append(("sae_factory_pipeline_heads2_layer0", dt * 1e6,
+                 f"mmcs={mmcs:.3f}_mse={mse:.4f}"
+                 f"_levels={len(F.effective_levels(hcfg))}"))
+    return rows
 
 
 def _gsp_row(full):

@@ -205,6 +205,40 @@ register_plan_backend(PlanBackend(
 ))
 
 
+_L1INF_LEVELS = (("inf", 1), ("1", 1))
+
+
+def _exact_l1inf_available(key: PlanKey) -> bool:
+    # The EXACT ℓ1,∞ projection (Chu et al. semismooth Newton) targets the
+    # same ball as the bi-level design but is a different operator — offering
+    # it under method="auto" deliberately trades bi-level's O(1/n) looseness
+    # for measured speed (the equality matrix pins it at loose tolerance).
+    # Unsharded 2-D scalar-radius forward keys only: the Newton fori_loop and
+    # the per-column sort make its vjp cost pathological for training keys.
+    return (key.levels == _L1INF_LEVELS and len(key.shape) == 2
+            and key.sharding is None and key.radius_kind == "scalar"
+            and not key.grad)
+
+
+def _build_exact_l1inf(key: PlanKey):
+    from .exact_l1inf import project_l1inf_exact
+
+    def fn(y, radius):
+        return project_l1inf_exact(y, radius)
+
+    return fn
+
+
+register_plan_backend(PlanBackend(
+    name="exact_l1inf",
+    available=_exact_l1inf_available,
+    build=_build_exact_l1inf,
+    description="EXACT l1,inf projection (Chu et al. semismooth Newton on "
+                "the dual): same ball as the bi-level design, exact optimum "
+                "— method='auto' trades exactness for speed by measurement",
+))
+
+
 def _maybe_register_kernel_backends() -> None:
     """Lazily pull in the fused-kernel backends (kernels imports core, so core
     cannot import kernels at module load — first make_plan does it instead)."""

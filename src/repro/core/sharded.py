@@ -189,7 +189,9 @@ def _resolve_sharded_method(method: str, sched: sched_mod.Schedule,
 
 def multilevel_project_sharded(y: jax.Array, levels, radius, *, mesh, spec,
                                method: str = "sort",
-                               batch_dims: int = 0) -> jax.Array:
+                               batch_dims: int = 0,
+                               backend: str = "jnp",
+                               interpret: bool = False) -> jax.Array:
     """MP^ν on a mesh: execute the compiled schedule under ``shard_map``.
 
     ``spec`` is the PartitionSpec of ``y`` over ``mesh`` (any sharded-axis
@@ -202,7 +204,17 @@ def multilevel_project_sharded(y: jax.Array, levels, radius, *, mesh, spec,
     ``method`` picks the θ-solver for the replicated outer solve and any
     local ℓ1 applies (``"auto"`` autotunes on the gathered aggregate length);
     a mesh-spanning ℓ1 group always uses the distributed bisection.
+
+    ``backend`` picks the shard-local stage implementation: ``"jnp"`` (the
+    schedule body above) or ``"codegen"`` — the fused Pallas kernels of
+    ``kernels/codegen`` running inside the shard_map body, with the same
+    collective plan spliced between them (``interpret`` lowers those kernels
+    in interpreter mode off-TPU). Gate ``"codegen"`` with
+    ``kernels.codegen.distributed.shardable`` — ineligible designs raise.
     """
+    if backend not in ("jnp", "codegen"):
+        raise ValueError(f"unknown sharded backend {backend!r}: "
+                         "expected 'jnp' or 'codegen'")
     y = jnp.asarray(y)
     sched = sched_mod.compile_schedule(y.shape, levels, batch_dims)
     if not isinstance(spec, P):
@@ -215,7 +227,13 @@ def multilevel_project_sharded(y: jax.Array, levels, radius, *, mesh, spec,
     if padded.shape != y.shape:
         sched = sched_mod.compile_schedule(padded.shape, levels, batch_dims)
 
-    body = make_schedule_body(sched, names, method=meth)
+    if backend == "codegen":
+        from repro.kernels.codegen import distributed as _dist
+
+        body = _dist.make_codegen_schedule_body(
+            sched, names, mesh, y.dtype, method=meth, interpret=interpret)
+    else:
+        body = make_schedule_body(sched, names, method=meth)
     in_spec = P(*names)
     # check_rep=False: the generic θ-solvers run while/fori loops (filter's
     # active-set sweep, bisect's fixed iteration) that the replication checker

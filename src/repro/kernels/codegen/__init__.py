@@ -18,7 +18,8 @@ and benchmarked against them by ``benchmarks/run.py --only codegen``.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Sequence
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,71 @@ from repro.core.schedule import compile_schedule, canonical_levels
 from . import lowering, tiling  # noqa: F401
 from .lowering import generate, generate_batched  # noqa: F401
 from .tiling import (BatchedTilePlan, TilePlan,  # noqa: F401
-                     plan_batched_tiles, plan_tiles)
+                     candidate_tile_plans, plan_batched_tiles, plan_tiles)
+
+
+# measured block-size winners, keyed on (canonical shape via schedule key,
+# dtype, device platform, interpret) — one shoot-out per workload, ever
+_TUNED_TILES: Dict[Tuple, TilePlan] = {}
+_TUNE_REPS = 3          # interleaved min-of-rounds (the planner's protocol)
+
+
+def clear_tile_cache() -> None:
+    """Drop every cached block-size verdict (benches/tests)."""
+    _TUNED_TILES.clear()
+
+
+def autotune_tiles(shape, levels, dtype, *, method: str = "bisect",
+                   interpret: bool = False,
+                   measure: Optional[bool] = None) -> Optional[TilePlan]:
+    """Measured block-size search: shoot out ``candidate_tile_plans`` the way
+    ``method="auto"`` shoots out planner backends, and cache the winner per
+    (canonical shape, dtype, device, interpret).
+
+    Each candidate's FULL fused pipeline (reduce → θ-solve → apply) is jitted
+    and timed interleaved min-of-rounds on synthetic data of the exact
+    workload. ``measure=None`` defaults to measuring only on real hardware:
+    in interpret mode block sizes change no machine behaviour (tests would
+    pay the shoot-out for a meaningless verdict), so the heuristic default is
+    returned — benches that want the interpret-mode search anyway pass
+    ``measure=True``. Returns ``None`` when the design cannot be generated.
+    """
+    shape = tuple(int(s) for s in shape)
+    levels = canonical_levels(levels)
+    dtype = np.dtype(dtype)
+    device = jax.devices()[0].platform
+    key = (shape, levels, dtype.name, device, bool(interpret))
+    if key in _TUNED_TILES:
+        return _TUNED_TILES[key]
+    sched = compile_schedule(shape, levels)
+    base = compile_schedule(shape[sched.batch_dims:], levels) \
+        if sched.batch_dims else sched
+    cands = candidate_tile_plans(base, dtype)
+    if not cands:
+        return None
+    if measure is None:
+        measure = not interpret
+    if len(cands) == 1 or not measure:
+        _TUNED_TILES[key] = cands[0]
+        return cands[0]
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.uniform(0.0, 1.0, shape), dtype)
+    r = jnp.asarray(1.0, dtype)
+    fns = [jax.jit(lowering.generate(sched, dtype, method=method,
+                                     interpret=interpret, tile_plan=tp))
+           for tp in cands]
+    for fn in fns:
+        for _ in range(2):
+            jax.block_until_ready(fn(y, r))  # compile + warm
+    best = [float("inf")] * len(fns)
+    for _ in range(_TUNE_REPS):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(y, r))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    winner = cands[int(np.argmin(best))]
+    _TUNED_TILES[key] = winner
+    return winner
 
 
 def supported(shape, levels, dtype) -> bool:
@@ -44,20 +109,36 @@ def supported(shape, levels, dtype) -> bool:
 
 @functools.lru_cache(maxsize=None)
 def _cached_build(shape, levels, dtype_name: str, method: str,
-                  interpret: bool, jit: bool) -> Callable:
+                  interpret: bool, jit: bool,
+                  tile_plan: Optional[TilePlan]) -> Callable:
     sched = compile_schedule(shape, levels)
     fn = lowering.generate(sched, np.dtype(dtype_name), method=method,
-                           interpret=interpret)
+                           interpret=interpret, tile_plan=tile_plan)
     return jax.jit(fn) if jit else fn
 
 
 def build(shape, levels, dtype, *, method: str = "bisect",
-          interpret: bool = False, jit: bool = False) -> Callable:
+          interpret: bool = False, jit: bool = False,
+          tile_plan: Optional[TilePlan] = None) -> Callable:
     """Generate (or fetch from cache) the fused ``(y, radius) -> x`` kernel
-    for one workload. ``method`` selects the outer θ-solve backend."""
+    for one workload. ``method`` selects the outer θ-solve backend;
+    ``tile_plan`` overrides the heuristic block sizes (``TilePlan`` is a
+    hashable NamedTuple, so it joins the cache key)."""
     return _cached_build(tuple(int(s) for s in shape),
                          canonical_levels(levels), np.dtype(dtype).name,
-                         method, bool(interpret), bool(jit))
+                         method, bool(interpret), bool(jit), tile_plan)
+
+
+def build_tuned(shape, levels, dtype, *, method: str = "bisect",
+                interpret: bool = False, jit: bool = False,
+                measure: Optional[bool] = None) -> Callable:
+    """Like :func:`build`, but with measured block sizes: runs (or fetches)
+    the :func:`autotune_tiles` shoot-out for the workload and builds with the
+    winning :class:`TilePlan`. The planner backend's build path."""
+    tp = autotune_tiles(shape, levels, dtype, method=method,
+                        interpret=interpret, measure=measure)
+    return build(shape, levels, dtype, method=method, interpret=interpret,
+                 jit=jit, tile_plan=tp)
 
 
 @functools.lru_cache(maxsize=None)

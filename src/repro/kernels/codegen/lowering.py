@@ -202,27 +202,16 @@ def _reduce_call(y: jax.Array, tp: TilePlan, norms: Sequence[str],
 # --------------------------------------------------------------------------- #
 
 
-def _apply_tile(norms: Sequence[str], stages, vfin, u):
-    """The backward sweep on one resident tile (pure array form).
+def _apply_chain(norms: Sequence[str], stages, w):
+    """Levels L-2 … 1 of the backward sweep on one resident tile.
 
-    ``stages`` are ``[y_tile, v_1, …, v_{L-2}]``; ``u`` the solved-aggregate
-    row; ``vfin`` the saved global final aggregate (ℓ2 last reduce only). The
-    radii chain ``w`` starts at the solved aggregate and walks levels L-1 → 1;
-    every stage input it needs is a saved forward aggregate already resident
-    in the tile. Shared by the single-item and batched-grid apply kernels.
+    ``w`` is the radii tensor produced by the level-L-1 step (shaped like the
+    last intermediate aggregate); the group axis of each step is the leading
+    resident axis of its stage input, radii/aggregates live one stage up.
+    Factored out of :func:`_apply_tile` so the sharded splice can resume the
+    sweep here after a mesh-spanning level-L-1 ℓ1 apply ran collectively.
     """
     L = len(norms) + 1
-    # level L-1: its group runs along the sublane axis of the 2-D tile
-    x, q, w = stages[-1], norms[-1], u
-    if q == "inf":
-        w = jnp.clip(x, -w, w)
-    elif q == "2":
-        scale = jnp.where(vfin > w, w / jnp.maximum(vfin, 1e-30), 1.0)
-        w = x * scale
-    else:  # "1" — tiling pinned the whole group axis into this block
-        w = _grouped_l1_tile(x, w)
-    # levels L-2 … 1: group axis = the leading resident axis of each
-    # stage input; radii/aggregates live one stage up (w's shape)
     for lvl in range(L - 2, 0, -1):
         x, agg, q = stages[lvl - 1], stages[lvl], norms[lvl - 1]
         if q == "inf":
@@ -233,6 +222,27 @@ def _apply_tile(norms: Sequence[str], stages, vfin, u):
         else:
             w = _grouped_l1_tile(x, w[None])
     return w
+
+
+def _apply_tile(norms: Sequence[str], stages, vfin, u):
+    """The backward sweep on one resident tile (pure array form).
+
+    ``stages`` are ``[y_tile, v_1, …, v_{L-2}]``; ``u`` the solved-aggregate
+    row; ``vfin`` the saved global final aggregate (ℓ2 last reduce only). The
+    radii chain ``w`` starts at the solved aggregate and walks levels L-1 → 1;
+    every stage input it needs is a saved forward aggregate already resident
+    in the tile. Shared by the single-item and batched-grid apply kernels.
+    """
+    # level L-1: its group runs along the sublane axis of the 2-D tile
+    x, q, w = stages[-1], norms[-1], u
+    if q == "inf":
+        w = jnp.clip(x, -w, w)
+    elif q == "2":
+        scale = jnp.where(vfin > w, w / jnp.maximum(vfin, 1e-30), 1.0)
+        w = x * scale
+    else:  # "1" — tiling pinned the whole group axis into this block
+        w = _grouped_l1_tile(x, w)
+    return _apply_chain(norms, stages, w)
 
 
 def _make_apply_kernel(norms: Sequence[str]):
@@ -276,6 +286,44 @@ def _apply_call(y: jax.Array, aggs, vfin: jax.Array, u: jax.Array,
     )(y, *aggs, *rows)
 
 
+def _make_partial_apply_kernel(norms: Sequence[str]):
+    """Apply epilogue that *resumes* at level L-2: the level-L-1 radii tensor
+    ``w`` (shaped like the last intermediate aggregate v_{L-2}) arrives as an
+    input instead of being computed in-tile — the sharded splice computed it
+    with the distributed grouped-ℓ1 solve when level L-1 spans the mesh.
+
+    Inputs: ``y, v_1, …, v_{L-2}, w``; output: the projected tile.
+    """
+    L = len(norms) + 1
+
+    def kernel(*refs):
+        y_ref, v_refs = refs[0], refs[1:L - 1]
+        w_ref, out_ref = refs[-2], refs[-1]
+        stages = [y_ref[...]] + [v[...] for v in v_refs]
+        out_ref[...] = _apply_chain(norms, stages, w_ref[...])
+
+    return kernel
+
+
+def _partial_apply_call(y: jax.Array, aggs, w: jax.Array, tp: TilePlan,
+                        norms: Sequence[str], interpret: bool):
+    """Run the resumed apply epilogue; ``w`` is blocked exactly like the last
+    intermediate aggregate (same BlockSpec as ``aggs[-1]``)."""
+    grid = (pl.cdiv(tp.m, tp.block_m), pl.cdiv(tp.n, tp.block_n))
+    agg_specs, _ = _agg_specs_shapes(tp, y.dtype)
+    return pl.pallas_call(
+        _make_partial_apply_kernel(norms),
+        grid=grid,
+        in_specs=[_y_spec(tp)] + agg_specs + [agg_specs[-1]],
+        out_specs=_y_spec(tp),
+        out_shape=jax.ShapeDtypeStruct(tp.canon_shape, y.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(y, *aggs, w.astype(y.dtype))
+
+
 # --------------------------------------------------------------------------- #
 # Outer stage + the generator
 # --------------------------------------------------------------------------- #
@@ -296,28 +344,46 @@ def _solve_outer_vec(v: jax.Array, norm: str, radius, method: str,
     return jnp.minimum(v, jnp.asarray(radius, v.dtype))  # ℓ∞ on v ≥ 0
 
 
-def generate(sched: Schedule, dtype, *, method: str = "bisect",
-             interpret: bool = False) -> Callable:
-    """Compile ``sched`` into a fused ``(y, radius) -> x`` callable.
-
-    ``method`` picks the *outer* θ-solve backend (the in-tile grouped solves
-    are always the fixed-budget bisection — stable latency, VPU-shaped).
-    Leading batch axes lower as vmaps of the batch-free kernel (the batch
-    axes join the Pallas grid). Raises ``ValueError`` when the tiler rejects
-    the design — gate with :func:`tiling.plan_tiles` first.
-    """
-    if sched.batch_dims:
-        base_sched = sched_mod.compile_schedule(
-            sched.shape[sched.batch_dims:], sched.levels)
-        fn = generate(base_sched, dtype, method=method, interpret=interpret)
-        for _ in range(sched.batch_dims):
-            fn = jax.vmap(fn, in_axes=(0, None))
-        return fn
+def _resolve_tile_plan(sched: Schedule, dtype,
+                       tile_plan: TilePlan | None) -> TilePlan:
+    """The generator's tiling: an explicit (autotuned) plan, validated against
+    the schedule, or the heuristic default from :func:`plan_tiles`."""
+    if tile_plan is not None:
+        if tile_plan.canon_shape != sched.canonical_shape:
+            raise ValueError(
+                f"tile plan built for canonical shape {tile_plan.canon_shape} "
+                f"cannot lower schedule with canonical shape "
+                f"{sched.canonical_shape}")
+        return tile_plan
     tp = plan_tiles(sched, dtype)
     if tp is None:
         raise ValueError(
             f"codegen cannot lower levels={sched.levels} on shape="
             f"{sched.shape}: no VMEM-resident tiling (or flat non-l1 solve)")
+    return tp
+
+
+def generate(sched: Schedule, dtype, *, method: str = "bisect",
+             interpret: bool = False,
+             tile_plan: TilePlan | None = None) -> Callable:
+    """Compile ``sched`` into a fused ``(y, radius) -> x`` callable.
+
+    ``method`` picks the *outer* θ-solve backend (the in-tile grouped solves
+    are always the fixed-budget bisection — stable latency, VPU-shaped).
+    Leading batch axes lower as vmaps of the batch-free kernel (the batch
+    axes join the Pallas grid). ``tile_plan`` overrides the heuristic block
+    sizes (the measured autotuner's winner). Raises ``ValueError`` when the
+    tiler rejects the design — gate with :func:`tiling.plan_tiles` first.
+    """
+    if sched.batch_dims:
+        base_sched = sched_mod.compile_schedule(
+            sched.shape[sched.batch_dims:], sched.levels)
+        fn = generate(base_sched, dtype, method=method, interpret=interpret,
+                      tile_plan=tile_plan)
+        for _ in range(sched.batch_dims):
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn
+    tp = _resolve_tile_plan(sched, dtype, tile_plan)
     norms = [q for q, _ in sched.levels]
 
     def raw(y, radius):
@@ -514,7 +580,8 @@ def _solve_outer_batched(v: jax.Array, norm: str, radii: jax.Array,
 
 
 def generate_batched(sched: Schedule, dtype, *, method: str = "bisect",
-                     interpret: bool = False) -> Callable:
+                     interpret: bool = False,
+                     tile_plan: TilePlan | None = None) -> Callable:
     """Compile ``sched`` into a fused batched ``(ys, radii) -> xs`` callable.
 
     ``ys`` stacks B instances of ``sched.shape`` along a leading axis with a
@@ -530,11 +597,7 @@ def generate_batched(sched: Schedule, dtype, *, method: str = "bisect",
             "generate_batched takes a batch-free schedule; the stacked "
             "serving axis is the callable's leading axis, not a schedule "
             "batch dim")
-    tp = plan_tiles(sched, dtype)
-    if tp is None:
-        raise ValueError(
-            f"codegen cannot lower levels={sched.levels} on shape="
-            f"{sched.shape}: no VMEM-resident tiling (or flat non-l1 solve)")
+    tp = _resolve_tile_plan(sched, dtype, tile_plan)
     norms = [q for q, _ in sched.levels]
 
     def raw(ys, radii):

@@ -23,6 +23,13 @@ radii (and the saved *global* final aggregate), so they split freely.
 ``plan_tiles`` returns ``None`` when no block assignment fits the VMEM
 budget — the planner backend's ``available()`` gate, which routes the design
 back to the jnp schedule executor.
+
+``plan_tiles``'s default block sizes are heuristics, not measurements.
+``candidate_tile_plans`` enumerates the small measured-search grid around the
+default (halved/doubled block sizes, VMEM-filtered, the ℓ1 residency pin
+respected) that ``kernels.codegen.autotune_tiles`` shoots out the same way
+``method="auto"`` shoots out planner backends — the winner is cached per
+(canonical shape, dtype, device, interpret).
 """
 
 from __future__ import annotations
@@ -148,3 +155,42 @@ def plan_tiles(sched: Schedule, dtype) -> Optional[TilePlan]:
             return None
     return TilePlan(dims, lead, n, m, block_n, block_m, n_resident,
                     _tile_bytes(lead, block_n, block_m, itemsize))
+
+
+def candidate_tile_plans(sched: Schedule, dtype) -> Tuple[TilePlan, ...]:
+    """The measured-search grid for one schedule: the default plan first, then
+    every VMEM-fitting neighbor with halved/doubled block sizes.
+
+    The grid is deliberately small (≤ 9 plans): the autotuner times each
+    candidate's full fused pipeline, so the search must stay cheap enough to
+    run at plan-build time. An ℓ1 apply over the sublane axis keeps its
+    residency pin (``block_n = n`` is the only legal choice there), so those
+    designs search ``block_m`` only. Returns ``()`` when the design cannot be
+    generated at all, and a single plan for the degenerate flat solve.
+    """
+    default = plan_tiles(sched, dtype)
+    if default is None:
+        return ()
+    if len(sched.levels) == 1:
+        return (default,)
+    itemsize = np.dtype(dtype).itemsize
+    if default.n_resident:
+        ns = (default.block_n,)
+    else:
+        ns = {default.block_n,
+              max(MIN_BLOCK_N, default.block_n // 2),
+              min(max(MIN_BLOCK_N, default.n), default.block_n * 2)}
+    ms = {default.block_m,
+          max(MIN_BLOCK_M, default.block_m // 2),
+          min(max(MIN_BLOCK_M, default.m), default.block_m * 2)}
+    plans = [default]
+    for bn in sorted(ns):
+        for bm in sorted(ms):
+            vb = _tile_bytes(default.lead, bn, bm, itemsize)
+            if vb > VMEM_BUDGET_BYTES:
+                continue
+            tp = TilePlan(default.canon_shape, default.lead, default.n,
+                          default.m, bn, bm, default.n_resident, vb)
+            if tp not in plans:
+                plans.append(tp)
+    return tuple(plans)

@@ -42,8 +42,14 @@ def _codegen_available(key: planmod.PlanKey) -> bool:
 
 
 def _build_codegen(key: planmod.PlanKey):
-    return codegen.build(key.shape, key.levels, key.dtype,
-                         method=_OUTER_METHOD, interpret=key.interpret)
+    # build_tuned wires the measured block-size autotuner into make_plan:
+    # the small candidate grid around the heuristic TilePlan is shot out the
+    # same way method="auto" shoots out backends, and the winner is cached
+    # per (canonical shape, dtype, device, interpret). In interpret mode the
+    # measurement is skipped (block sizes change no machine behaviour there)
+    # and the heuristic default is used.
+    return codegen.build_tuned(key.shape, key.levels, key.dtype,
+                               method=_OUTER_METHOD, interpret=key.interpret)
 
 
 planmod.register_plan_backend(planmod.PlanBackend(
@@ -71,4 +77,48 @@ planmod.register_plan_backend(planmod.PlanBackend(
                 "SMEM) instead of vmap-lifting the per-item kernel — one "
                 "dispatch per pipeline stage for the whole bucket",
     batch_native=True,
+))
+
+
+def _sharded_codegen_available(key: planmod.PlanKey) -> bool:
+    # the mesh executor's gates (scalar radius, forward key, live mesh) plus
+    # the codegen ones (TPU or interpret; the shard-local schedule must have
+    # a splice-compatible sharding and a VMEM tiling — distributed.shardable)
+    if (key.sharding is None or key.radius_kind != "scalar" or key.grad
+            or not (key.device == "tpu" or key.interpret)):
+        return False
+    mk = (key.sharding.mesh_axes, key.sharding.devices)
+    if mk not in planmod._MESHES:
+        return False
+    from .codegen import distributed as dist
+
+    return dist.shardable(key.shape, key.levels, key.sharding.spec,
+                          planmod._MESHES[mk], key.dtype)
+
+
+def _build_sharded_codegen(key: planmod.PlanKey):
+    from repro.core import sharded as shmod
+
+    mesh = planmod._MESHES[key.sharding.mesh_axes, key.sharding.devices]
+    spec = key.sharding.spec
+    levels = list(key.levels)
+    interpret = key.interpret
+
+    def fn(y, radius):
+        return shmod.multilevel_project_sharded(
+            y, levels, radius, mesh=mesh, spec=spec, method="auto",
+            backend="codegen", interpret=interpret)
+
+    return fn
+
+
+planmod.register_plan_backend(planmod.PlanBackend(
+    name="sharded_codegen",
+    available=_sharded_codegen_available,
+    build=_build_sharded_codegen,
+    description="schedule executor under shard_map with the shard-local "
+                "stages lowered through the fused codegen kernels: same "
+                "collective plan as 'sharded', one streaming Pallas reduce "
+                "and one fused apply epilogue per shard "
+                "(kernels/codegen/distributed.py)",
 ))

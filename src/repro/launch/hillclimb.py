@@ -71,12 +71,15 @@ VARIANTS = {
     # the SAE factory's own train cell (specs.sae_factory_cell): d_model=2048
     # activations in, 8× overcomplete dictionary, encoder projected per step
     "sae_factory": ("sae_factory", "train_4k", dict()),
+    # head-structured factory (§6): 3-D encoder, tri-level l1,inf,inf ball —
+    # roofline delta vs sae_factory = the extra reduce level's collective cost
+    "sae_factory_heads8": ("sae_factory", "train_4k", dict(heads=8)),
 }
 
 
-def _sae_factory_cell(mesh):
+def _sae_factory_cell(mesh, heads=1):
     return SP.sae_factory_cell(2048, mesh, expansion=8,
-                               batch=4096, microbatch=512)
+                               batch=4096, microbatch=512, heads=heads)
 
 
 def run_variant(name, out_dir):
@@ -85,7 +88,7 @@ def run_variant(name, out_dir):
     t0 = time.time()
     if arch == "sae_factory":
         shape = SHAPES[shape_name]
-        cell = _sae_factory_cell(mesh)
+        cell = _sae_factory_cell(mesh, heads=overrides.get("heads", 1))
     else:
         cfg = registry.get_arch(arch)
         shape = SHAPES[shape_name]

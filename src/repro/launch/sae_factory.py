@@ -31,6 +31,12 @@ def main(argv=None) -> int:
     ap.add_argument("--train-steps", type=int, default=40)
     ap.add_argument("--expansion", type=int, default=4)
     ap.add_argument("--radius", type=float, default=1.0)
+    ap.add_argument("--heads", type=int, default=1,
+                    help=">1: head-structured dictionary — 3-D encoder "
+                         "projected onto the tri-level l1,inf,inf ball")
+    ap.add_argument("--checkpoint", default="",
+                    help="checkpoint dir to harvest from (runtime/checkpoint "
+                         "layout); default: seeded init weights")
     ap.add_argument("--seeds", default="0,1")
     ap.add_argument("--full", action="store_true",
                     help="full-size arch (default: smoke config)")
@@ -47,11 +53,25 @@ def main(argv=None) -> int:
         arch=args.arch, smoke=not args.full, site=args.site,
         layers=tuple(int(x) for x in args.layers.split(",") if x) or None,
         harvest_steps=args.harvest_steps, train_steps=args.train_steps,
-        expansion=args.expansion, radius=args.radius)
+        expansion=args.expansion, radius=args.radius, heads=args.heads)
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     seeds = tuple(int(s) for s in args.seeds.split(","))
-    summary = F.run_factory(fcfg, out, seeds=seeds)
+    lm_params = None
+    if args.checkpoint:
+        from repro.runtime.checkpoint import CheckpointManager
+
+        tree, manifest = CheckpointManager(args.checkpoint).restore()
+        if tree is None:
+            print(f"no checkpoint found under {args.checkpoint}",
+                  file=sys.stderr)
+            return 1
+        # training states store {"params", "opt"}; bare param trees pass as-is
+        lm_params = tree["params"] if (isinstance(tree, dict)
+                                       and "params" in tree) else tree
+        print(f"harvesting from checkpoint step "
+              f"{manifest.get('step', '?')} at {args.checkpoint}")
+    summary = F.run_factory(fcfg, out, seeds=seeds, lm_params=lm_params)
     if args.gsp:
         n_dev = jax.device_count()
         mesh = make_host_mesh(1, n_dev) if n_dev > 1 else None

@@ -236,23 +236,26 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 def sae_factory_cell(d_model: int, mesh, *, expansion: int = 8,
                      batch: int = 4096, microbatch: int = 512,
-                     radius: float = 1.0):
+                     radius: float = 1.0, heads: int = 1):
     """The factory's projected dictionary-SAE train step as a lowerable cell.
 
     Activation rows stream in (n_micro, mb, d_model); the encoder weight
     ((d_model, expansion*d_model), 'ffn'-sharded over 'model') is projected
     onto the bi-level ball every step — through the §3 mesh executor when its
     trailing axis is sharded, so the dry-run/roofline sees the factory's real
-    collective cost at production batch sizes.
+    collective cost at production batch sizes. ``heads > 1`` is the §6
+    head-structured variant: a 3-D encoder (d_model, heads, d_dict//heads)
+    projected onto the tri-level ℓ1,∞,∞ ball.
     """
     from repro.models import sae
     from repro.training import sae_factory as F
 
     d_dict = expansion * d_model
     fcfg = F.SAEFactoryConfig(expansion=expansion, radius=radius,
-                              microbatch=microbatch, sae_batch=batch)
+                              microbatch=microbatch, sae_batch=batch,
+                              heads=heads)
     tcfg = F.sae_train_config(fcfg)
-    tpl = sae.dict_template(d_model, d_dict)
+    tpl = sae.dict_template(d_model, d_dict, heads=heads)
     pspecs = PM.param_specs(tpl, SH.param_rules(mesh, fsdp=True),
                             SH.mesh_shape_dict(mesh))
     params = PM.abstract_params(tpl, jnp.dtype(tcfg.param_dtype))

@@ -68,12 +68,30 @@ def loss_fn(params, batch, cfg: ArchConfig, *, alpha: float = 1.0,
 # columns. The decoder weight is the learned dictionary compared across runs
 # with MMCS (training/mmcs.py).
 
-def dict_template(d_in: int, d_dict: int):
-    """Params for the activation SAE: encode d_in -> d_dict, decode back."""
+def dict_template(d_in: int, d_dict: int, heads: int = 1):
+    """Params for the activation SAE: encode d_in -> d_dict, decode back.
+
+    ``heads > 1`` is the HEAD-STRUCTURED variant (paper §6): the dictionary
+    splits into ``heads`` feature groups and the encoder/decoder weights keep
+    the head axis explicit — ``enc/w`` is (d_in, heads, d_dict//heads) — so a
+    tri-level ν can aggregate per head (zeroing whole heads, not just whole
+    features). The forward math is identical: the head axes flatten back to
+    d_dict inside :func:`dict_forward`.
+    """
+    if d_dict % heads:
+        raise ValueError(f"d_dict={d_dict} not divisible by heads={heads}")
+    if heads == 1:
+        enc_w = ParamDef((d_in, d_dict), ("embed", "ffn"), "scaled")
+        dec_w = ParamDef((d_dict, d_in), ("ffn", "embed"), "scaled")
+    else:
+        enc_w = ParamDef((d_in, heads, d_dict // heads),
+                         ("embed", None, "ffn"), "scaled")
+        dec_w = ParamDef((heads, d_dict // heads, d_in),
+                         (None, "ffn", "embed"), "scaled")
     return {
-        "enc": {"w": ParamDef((d_in, d_dict), ("embed", "ffn"), "scaled"),
+        "enc": {"w": enc_w,
                 "b": ParamDef((d_dict,), (None,), "zeros")},
-        "dec": {"w": ParamDef((d_dict, d_in), ("ffn", "embed"), "scaled"),
+        "dec": {"w": dec_w,
                 "b": ParamDef((d_in,), (None,), "zeros")},
     }
 
@@ -82,10 +100,15 @@ def dict_forward(params, x):
     """x (B, d_in) -> (features (B, d_dict), reconstruction (B, d_in)).
 
     Pre-bias form (x is decoder-bias-centred before encoding), ReLU features.
+    Head-structured weights (3-D, from ``dict_template(heads>1)``) flatten to
+    the same (d_in, d_dict) / (d_dict, d_in) matmuls.
     """
+    we, wd = params["enc"]["w"], params["dec"]["w"]
+    we = we.reshape(we.shape[0], -1)
+    wd = wd.reshape(-1, wd.shape[-1])
     xc = x - params["dec"]["b"]
-    f = jax.nn.relu(xc @ params["enc"]["w"] + params["enc"]["b"])
-    xr = f @ params["dec"]["w"] + params["dec"]["b"]
+    f = jax.nn.relu(xc @ we + params["enc"]["b"])
+    xr = f @ wd + params["dec"]["b"]
     return f, xr
 
 

@@ -87,7 +87,31 @@ def _sharded_leaf_key(mesh, pspec, ndim: int, need: int):
     return key
 
 
-def _project_leaf_sharded(w, spec: ProjectionSpec, radius, method, mesh, names):
+def _resolve_shard_backend(backend: str, shape, levels, names, mesh, dtype,
+                           batch_dims: int) -> str:
+    """Pick the shard_map body implementation for one sharded leaf.
+
+    ``"auto"`` lowers the shard-local stages through the fused codegen
+    kernels (kernels/codegen/distributed) when the design is eligible and
+    the kernels compile natively (TPU); everywhere else — or for designs
+    ``shardable`` rejects — it keeps the jnp schedule body, which is the
+    same collective plan without the fusion."""
+    if backend != "auto":
+        return backend
+    if jax.default_backend() != "tpu":
+        return "jnp"
+    from repro.kernels.codegen import distributed as _dist
+
+    try:
+        ok = _dist.shardable(shape, list(levels), names, mesh, dtype,
+                             batch_dims)
+    except Exception:
+        ok = False
+    return "codegen" if ok else "jnp"
+
+
+def _project_leaf_sharded(w, spec: ProjectionSpec, radius, method, mesh,
+                          names, backend: str = "auto"):
     """Project one sharded leaf in place via the schedule executor: leading
     stacked axes are batch dims, no gather of the weight ever happens.
     ``names`` is the canonical per-axis mesh-axis tuple (ShardingKey.spec)."""
@@ -97,13 +121,22 @@ def _project_leaf_sharded(w, spec: ProjectionSpec, radius, method, mesh, names):
         # reverse the trailing (projected) axes — an involution, so the same
         # permutation restores the layout (and permutes the spec with it)
         perm = tuple(range(batch)) + tuple(reversed(range(batch, w.ndim)))
+        pnames = tuple(names[a] for a in perm)
+        be = _resolve_shard_backend(backend, tuple(w.shape[a] for a in perm),
+                                    spec.levels, pnames, mesh, w.dtype, batch)
+        kw = {} if be == "jnp" else dict(
+            backend="codegen", interpret=jax.default_backend() != "tpu")
         out = sharded.multilevel_project_sharded(
             jnp.transpose(w, perm), list(spec.levels), radius, mesh=mesh,
-            spec=P(*(names[a] for a in perm)), method=method, batch_dims=batch)
+            spec=P(*pnames), method=method, batch_dims=batch, **kw)
         return jnp.transpose(out, perm)
+    be = _resolve_shard_backend(backend, tuple(w.shape), spec.levels, names,
+                                mesh, w.dtype, batch)
+    kw = {} if be == "jnp" else dict(
+        backend="codegen", interpret=jax.default_backend() != "tpu")
     return sharded.multilevel_project_sharded(
         w, list(spec.levels), radius, mesh=mesh, spec=P(*names),
-        method=method, batch_dims=batch)
+        method=method, batch_dims=batch, **kw)
 
 
 def _project_leaf(w, levels, radius, method, transpose=False):
@@ -141,7 +174,7 @@ def _spec_table(param_specs):
 
 
 def make_projection_hook(spec: ProjectionSpec | None, *, mesh=None,
-                         param_specs=None):
+                         param_specs=None, backend: str = "auto"):
     """Build the training-time projection hook ONCE (planner lifecycle,
     DESIGN.md §2): compile the regex, validate/resolve the θ-solver backend
     (including ``method="auto"`` via the planner — autotuned per distinct leaf
@@ -152,6 +185,12 @@ def make_projection_hook(spec: ProjectionSpec | None, *, mesh=None,
     With ``mesh`` and ``param_specs`` (the params' PartitionSpec tree), every
     matched leaf whose projected trailing axes are sharded runs the schedule
     executor under shard_map in place — no weight gather (DESIGN.md §3).
+
+    ``backend`` selects the shard-local stage implementation for those
+    leaves: ``"auto"`` (default) lowers eligible designs through the fused
+    codegen kernels on TPU and keeps the jnp schedule body elsewhere;
+    ``"jnp"`` / ``"codegen"`` force one — both execute the identical
+    collective plan.
     """
     if spec is None or not spec.enabled:
         return lambda params, step: params
@@ -171,7 +210,8 @@ def make_projection_hook(spec: ProjectionSpec | None, *, mesh=None,
                                              w.ndim, need)
                 if skey is not None:
                     return _project_leaf_sharded(
-                        w, spec, spec.radius, method, mesh, skey.spec
+                        w, spec, spec.radius, method, mesh, skey.spec,
+                        backend=backend,
                     ).astype(w.dtype)
                 return _project_leaf(w, spec.levels, spec.radius, method,
                                      transpose=spec.transpose).astype(w.dtype)

@@ -63,8 +63,20 @@ class SAEFactoryConfig:
     lr: float = 1e-2
     radius: float = 1.0
     levels: tuple = (("inf", 1), (1, 1))     # bi-level l1,inf by default
+    heads: int = 1                   # >1: head-structured dictionary (§6) —
+                                     # 3-D encoder + tri-level projection
     method: str = "bisect"
     seed: int = 0
+
+
+def effective_levels(fcfg: SAEFactoryConfig) -> tuple:
+    """The norm design actually projected: a head-structured factory
+    (``heads > 1``) upgrades the default bi-level design to the paper's §6
+    tri-level ℓ1,∞,∞ (one ∞ level per head axis of the 3-D encoder); an
+    explicit 3-axis ``fcfg.levels`` wins."""
+    if fcfg.heads == 1 or sum(k for _, k in fcfg.levels) != 2:
+        return tuple(fcfg.levels)
+    return (("inf", 1),) + tuple(fcfg.levels)
 
 
 def lm_for(fcfg: SAEFactoryConfig):
@@ -92,9 +104,13 @@ def sae_projection_spec(fcfg: SAEFactoryConfig) -> ProjectionSpec:
     """The per-step constraint: encoder columns (features) live on the ball.
 
     ``transpose=True`` groups by dictionary feature (paper §7.3 — the SAE's
-    feature-selection orientation), exactly like the table experiments.
+    feature-selection orientation), exactly like the table experiments. With
+    ``heads > 1`` the encoder is 3-D and the transposed view is
+    (d_per_head, heads, d_in): the tri-level design aggregates ∞ over the
+    per-head slots, ∞ over heads, then solves ℓ1 over d_in — zeroing whole
+    heads, not just whole features.
     """
-    return ProjectionSpec(pattern=r"enc/w", levels=tuple(fcfg.levels),
+    return ProjectionSpec(pattern=r"enc/w", levels=effective_levels(fcfg),
                           radius=fcfg.radius, every=1, method=fcfg.method,
                           transpose=True)
 
@@ -107,8 +123,9 @@ def sae_train_config(fcfg: SAEFactoryConfig) -> TrainConfig:
         projection=sae_projection_spec(fcfg), seed=fcfg.seed)
 
 
-def init_sae_state(d_in: int, d_dict: int, tcfg: TrainConfig, key):
-    params = PM.init_params(sae.dict_template(d_in, d_dict), key,
+def init_sae_state(d_in: int, d_dict: int, tcfg: TrainConfig, key, *,
+                   heads: int = 1):
+    params = PM.init_params(sae.dict_template(d_in, d_dict, heads=heads), key,
                             jnp.dtype(tcfg.param_dtype))
     return {"params": params, "opt": adamw.init(params, tcfg)}
 
@@ -141,7 +158,8 @@ def train_sae(harvest_dir, layer: int, fcfg: SAEFactoryConfig, *,
         vocab=1, seq_len=0, global_batch=fcfg.sae_batch,
         microbatch=fcfg.microbatch, activation_dir=str(harvest_dir),
         activation_layer=layer))
-    state = init_sae_state(d_in, d_dict, tcfg, jax.random.PRNGKey(seed))
+    state = init_sae_state(d_in, d_dict, tcfg, jax.random.PRNGKey(seed),
+                           heads=fcfg.heads)
     step = jax.jit(make_sae_train_step(tcfg))
     last = {}
     for i in range(fcfg.train_steps):
@@ -154,22 +172,27 @@ def train_sae(harvest_dir, layer: int, fcfg: SAEFactoryConfig, *,
     return {
         "params": params,
         "metrics": dict(last, **diag),
-        "dictionary": np.asarray(params["dec"]["w"]).T,     # (d_model, d_dict)
+        # head-structured dec/w is (heads, d_dict//heads, d_in): flatten the
+        # head axes back to d_dict before the (d_model, d_dict) orientation
+        "dictionary": np.asarray(params["dec"]["w"]).reshape(-1, d_in).T,
         "sparsity": {k: float(v)
                      for k, v in tree_sparsity(params, spec).items()},
     }
 
 
-def run_factory(fcfg: SAEFactoryConfig, workdir, *, seeds=(0, 1)) -> dict:
+def run_factory(fcfg: SAEFactoryConfig, workdir, *, seeds=(0, 1),
+                lm_params=None) -> dict:
     """Harvest once, train one SAE per (layer, seed), cross-compare with MMCS.
 
     The per-layer MMCS across seeds is the factory's headline consistency
     number (dictionaries learned from the same activations should agree up to
-    permutation/sign — exactly MMCS's invariances).
+    permutation/sign — exactly MMCS's invariances). ``lm_params`` harvests
+    from a trained checkpoint's weights instead of the seeded init (the CLI's
+    ``--checkpoint``).
     """
     from repro.training.mmcs import mmcs_sym
 
-    meta = harvest_activations(fcfg, workdir)
+    meta = harvest_activations(fcfg, workdir, params=lm_params)
     out = {"meta": meta, "layers": {}}
     for layer in meta["layers"]:
         runs = {s: train_sae(workdir, layer, fcfg, seed=s) for s in seeds}

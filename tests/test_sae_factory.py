@@ -230,6 +230,72 @@ def test_factory_end_to_end(harvest_dir):
                                atol=1e-6)
 
 
+def test_factory_head_structured_tri_level(harvest_dir):
+    # heads>1: 3-D encoder (d_in, heads, d//heads), tri-level l1,inf,inf ball
+    import dataclasses
+    d, meta = harvest_dir
+    hcfg = dataclasses.replace(FCFG, heads=2)
+    assert F.effective_levels(hcfg) == (("inf", 1),) + tuple(FCFG.levels)
+    assert F.sae_projection_spec(hcfg).levels == F.effective_levels(hcfg)
+    # an explicit 3-axis design wins over the implicit upgrade
+    explicit = dataclasses.replace(
+        hcfg, levels=(("2", 1), ("inf", 1), ("1", 1)))
+    assert F.effective_levels(explicit) == explicit.levels
+    run = F.train_sae(d, 0, hcfg, seed=0)
+    dm = meta["d_model"]
+    assert run["params"]["enc"]["w"].shape == (dm, 2, hcfg.expansion * dm // 2)
+    # the dictionary flattens the head axes back for MMCS
+    assert run["dictionary"].shape == (dm, hcfg.expansion * dm)
+    rep = F.constraint_report(run["params"], F.sae_projection_spec(hcfg))
+    assert rep["feasible"], rep
+    assert np.isfinite(run["metrics"]["mse"])
+
+
+def test_dict_template_head_validation():
+    from repro.models import sae
+    with pytest.raises(ValueError, match="divisible"):
+        sae.dict_template(8, 30, heads=4)
+    tpl = sae.dict_template(8, 32, heads=4)
+    assert tpl["enc"]["w"].shape == (8, 4, 8)
+    assert tpl["dec"]["w"].shape == (4, 8, 8)
+
+
+def test_head_structured_forward_matches_flat_math():
+    # flattening the head axes reproduces the 2-D matmul exactly
+    import jax
+    from repro.models import params as PM, sae
+    key = jax.random.PRNGKey(0)
+    p3 = PM.init_params(sae.dict_template(8, 16, heads=4), key)
+    p2 = jax.tree_util.tree_map(np.asarray, p3)
+    p2["enc"]["w"] = p2["enc"]["w"].reshape(8, 16)
+    p2["dec"]["w"] = p2["dec"]["w"].reshape(16, 8)
+    x = _rand((6, 8), seed=5)
+    f3, r3 = sae.dict_forward(p3, x)
+    f2, r2 = sae.dict_forward({k: {kk: jnp.asarray(v) for kk, v in d.items()}
+                               for k, d in p2.items()}, x)
+    np.testing.assert_allclose(np.asarray(f3), np.asarray(f2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r3), np.asarray(r2), atol=1e-6)
+
+
+def test_run_factory_accepts_checkpoint_params(tmp_path):
+    # --checkpoint path: harvest from explicit LM weights, not the seeded init
+    import dataclasses
+    import jax
+    fcfg = dataclasses.replace(FCFG, layers=(0,), harvest_steps=1,
+                               train_steps=2)
+    _, _, params = F.lm_for(fcfg)
+    scaled = jax.tree_util.tree_map(lambda w: w * 1.5, params)
+    out = F.run_factory(fcfg, tmp_path, seeds=(0,), lm_params=scaled)
+    assert 0 in out["layers"]
+    # different weights -> different activations than the default harvest
+    d2 = tmp_path / "default"
+    d2.mkdir()
+    F.harvest_activations(fcfg, d2)
+    a = np.load(next(tmp_path.glob("layer*_shard*.npy")))
+    b = np.load(next(d2.glob("layer*_shard*.npy")))
+    assert float(np.abs(a - b).max()) > 1e-6
+
+
 def test_gsp_whole_network_single_device():
     g = F.gsp_whole_network(steps=1)
     assert g["n_projected"] >= 10       # every ≥2-D weight of the smoke LM
