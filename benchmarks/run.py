@@ -35,6 +35,7 @@ _JSON_NAMES = {
     "train": "BENCH_train_step.json",
     "sae": "BENCH_sae_tables.json",
     "sae_factory": "BENCH_sae_factory.json",
+    "obs": "BENCH_obs_overhead.json",
 }
 
 
@@ -54,6 +55,14 @@ def _write_json(json_dir: pathlib.Path, section: str, rows, full: bool) -> None:
     path = json_dir / _JSON_NAMES[section]
     path.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {path}", file=sys.stderr)
+    # the obs-registry state the section's run left behind (engine/planner
+    # counters, latency histograms, ...) — one JSON-lines snapshot per
+    # section, next to its BENCH artifact, uploaded by CI with it
+    from repro.obs import metrics as obs_metrics
+
+    mpath = json_dir / f"METRICS_{section}.jsonl"
+    obs_metrics.get_registry().write_jsonl(mpath)
+    print(f"# wrote {mpath}", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -62,7 +71,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,table1,methods,plan,"
                          "sharded,codegen,sharded_codegen,serving,train,sae,"
-                         "sae_factory")
+                         "sae_factory,obs")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--no-json", action="store_true",
@@ -70,7 +79,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
-    from . import projections, sae_factory, sae_tables, serving_trace, train_step
+    from . import (obs_overhead, projections, sae_factory, sae_tables,
+                   serving_trace, train_step)
 
     sections = {
         "fig1": lambda: projections.fig1_radius(full=args.full),
@@ -88,6 +98,7 @@ def main(argv=None) -> None:
         "fig4": projections.fig4_parallel,
         "sae": lambda: sae_tables.tables(full=args.full),
         "sae_factory": lambda: sae_factory.factory_sweep(full=args.full),
+        "obs": lambda: obs_overhead.obs_sweep(full=args.full),
     }
     unknown = only - set(sections)
     if unknown:

@@ -117,6 +117,20 @@ _AUTO_WINNERS: Dict[PlanKey, Tuple[str, Dict[str, float]]] = {}
 _MESHES: Dict[Tuple[Tuple[str, int], ...], object] = {}  # ShardingKey.mesh_axes -> Mesh
 _KERNEL_BACKENDS_LOADED = False
 
+# cache-lifecycle counters (observability): hits/misses describe the current
+# cache generation (reset together with the caches by clear_cache, so sizes
+# and counters always refer to the same lifetime); "evictions" is cumulative
+# over the process (Prometheus counter semantics — a clear IS an eviction
+# event, so it must survive the clear that caused it)
+_COUNTER_KEYS = ("plan_hits", "plan_misses", "exec_hits", "exec_misses",
+                 "retraces", "autotune_runs", "autotune_hits")
+_COUNTERS: Dict[str, int] = dict.fromkeys(_COUNTER_KEYS, 0)
+_EVICTIONS = [0]
+
+
+def _count(event: str, n: int = 1) -> None:
+    _COUNTERS[event] += n
+
 
 def register_plan_backend(backend: PlanBackend) -> None:
     """Register (or replace) a specialized planner backend by name."""
@@ -124,16 +138,47 @@ def register_plan_backend(backend: PlanBackend) -> None:
 
 
 def clear_cache() -> None:
-    """Drop every cached plan, executable, and autotune verdict (tests/benches)."""
+    """Drop every cached plan, executable, and autotune verdict
+    (tests/benches), and reset the generation counters with them.
+
+    Dropped entries count into the cumulative ``evictions`` counter; the
+    hit/miss/retrace/autotune counters restart at zero so ``cache_info()``
+    sizes and counters always describe the same cache generation.
+    """
+    _EVICTIONS[0] += len(_PLANS) + len(_EXECS) + len(_AUTO_WINNERS)
     _EXECS.clear()
     _PLANS.clear()
     _AUTO_WINNERS.clear()
+    _COUNTERS.update(dict.fromkeys(_COUNTER_KEYS, 0))
 
 
 def cache_info() -> Dict[str, int]:
-    """Sizes of the planner caches (plans / executables / autotune winners)."""
-    return {"plans": len(_PLANS), "executables": len(_EXECS),
-            "auto_winners": len(_AUTO_WINNERS)}
+    """Sizes AND lifecycle counters of the planner caches.
+
+    Sizes: ``plans`` / ``executables`` / ``auto_winners``. Counters (since
+    the last :func:`clear_cache`): ``plan_hits``/``plan_misses`` (the
+    ``make_plan`` memo), ``exec_hits``/``exec_misses`` (jitted executables),
+    ``retraces`` (executable body re-traces beyond the first — a nonzero
+    value means some call pattern defeats the jit cache),
+    ``autotune_runs``/``autotune_hits`` (micro-benchmark shoot-outs vs
+    cached verdicts). ``evictions`` is cumulative over the process. The
+    same numbers are mirrored into the obs registry as
+    ``plan_cache_<name>`` gauges on every call.
+    """
+    info = {"plans": len(_PLANS), "executables": len(_EXECS),
+            "auto_winners": len(_AUTO_WINNERS), **_COUNTERS,
+            "evictions": _EVICTIONS[0]}
+    try:
+        from repro.obs import metrics as _obs_metrics
+
+        gauge = _obs_metrics.get_registry().gauge(
+            "plan_cache", "planner cache sizes and lifecycle counters "
+            "(core.plan.cache_info)", labels=("stat",))
+        for name, v in info.items():
+            gauge.labels(stat=name).set(v)
+    except Exception:  # pragma: no cover - obs must never break the planner
+        pass
+    return info
 
 
 # the single home of norm-design canonicalization is the schedule IR;
@@ -288,12 +333,16 @@ def _build_backend_fn(key: PlanKey, name: str) -> Callable:
 def _get_executable(key: PlanKey, name: str, donate: bool = False) -> _Executable:
     ek = (key, name, donate)
     if ek in _EXECS:
+        _count("exec_hits")
         return _EXECS[ek]
+    _count("exec_misses")
     base = _build_backend_fn(key, name)
     traces = [0]
 
     def counted(y, radius):
         traces[0] += 1  # python side effect: runs at trace time only
+        if traces[0] > 1:
+            _count("retraces")
         return base(y, radius)
 
     # a batch-native backend already takes the stacked (ys, radii) bucket —
@@ -502,12 +551,16 @@ def make_plan(shape, dtype, levels, radius_kind: str = "scalar",
                   canonical_sharding(sharding, len(shape)), bool(grad))
     cache_key = (key, method, donate)
     if cache_key in _PLANS:
+        _count("plan_hits")
         return _PLANS[cache_key]
+    _count("plan_misses")
     timings: Optional[Dict[str, float]] = None
     if method == AUTO:
         if key in _AUTO_WINNERS:
+            _count("autotune_hits")
             chosen, timings = _AUTO_WINNERS[key]
         else:
+            _count("autotune_runs")
             chosen, timings = _autotune(key)
             _AUTO_WINNERS[key] = (chosen, timings)
     else:

@@ -43,6 +43,8 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.obs import profile as obs_profile
+
 from . import ball
 
 Level = Tuple[object, int]
@@ -226,14 +228,17 @@ def execute(y: jax.Array, sched: Schedule, radius,
     method = ball.resolve_method(method)
     inputs = [y]
     aggs = []
-    for red in sched.reduces:
-        v = ball.norm_reduce(inputs[-1], red.norm, axes=red.axes)
+    for t, red in enumerate(sched.reduces):
+        with obs_profile.stage_scope(red, t):
+            v = ball.norm_reduce(inputs[-1], red.norm, axes=red.axes)
         aggs.append(v)
         inputs.append(v)
-    w = solve_outer(inputs[-1], sched.solve.norm, radius, sched.batch_dims,
-                    method)
+    with obs_profile.stage_scope(sched.solve):
+        w = solve_outer(inputs[-1], sched.solve.norm, radius,
+                        sched.batch_dims, method)
     for i, app in zip(reversed(range(len(aggs))), sched.applies):
-        w = apply_group(inputs[i], app.norm, w, app.axes, aggs[i], method)
+        with obs_profile.stage_scope(app, i):
+            w = apply_group(inputs[i], app.norm, w, app.axes, aggs[i], method)
     return w
 
 

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.obs import profile as obs_profile
+
 from . import ball
 from . import schedule as sched_mod
 
@@ -127,18 +129,19 @@ def make_schedule_body(sched: sched_mod.Schedule,
         inputs = [y_loc]
         aggs = []
         stage_names = [tuple(axis_names)]
-        for red in sched.reduces:
+        for t, red in enumerate(sched.reduces):
             cur, names = inputs[-1], stage_names[-1]
             coll = tuple(names[a] for a in red.axes if names[a])
-            if red.norm == "1":
-                v = jnp.sum(jnp.abs(cur), axis=red.axes)
-                v = jax.lax.psum(v, coll) if coll else v
-            elif red.norm == "2":
-                s = jnp.sum(jnp.square(cur), axis=red.axes)
-                v = jnp.sqrt(jax.lax.psum(s, coll) if coll else s)
-            else:
-                v = jnp.max(jnp.abs(cur), axis=red.axes)
-                v = jax.lax.pmax(v, coll) if coll else v
+            with obs_profile.stage_scope(red, t):
+                if red.norm == "1":
+                    v = jnp.sum(jnp.abs(cur), axis=red.axes)
+                    v = jax.lax.psum(v, coll) if coll else v
+                elif red.norm == "2":
+                    s = jnp.sum(jnp.square(cur), axis=red.axes)
+                    v = jnp.sqrt(jax.lax.psum(s, coll) if coll else s)
+                else:
+                    v = jnp.max(jnp.abs(cur), axis=red.axes)
+                    v = jax.lax.pmax(v, coll) if coll else v
             aggs.append(v)
             inputs.append(v)
             stage_names.append(tuple(
@@ -148,28 +151,30 @@ def make_schedule_body(sched: sched_mod.Schedule,
         # replicated, slice the local radii back out ---------------------- #
         top, names = inputs[-1], stage_names[-1]
         local_sizes = top.shape
-        g = top
-        for ax in range(b, len(names)):
-            if names[ax]:
-                g = jax.lax.all_gather(g, names[ax], axis=ax, tiled=True)
-        w = sched_mod.solve_outer(g, sched.solve.norm, radius, b, method)
-        for ax in range(b, len(names)):
-            if names[ax]:
-                idx = jax.lax.axis_index(names[ax])
-                w = jax.lax.dynamic_slice_in_dim(
-                    w, idx * local_sizes[ax], local_sizes[ax], axis=ax)
+        with obs_profile.stage_scope(sched.solve):
+            g = top
+            for ax in range(b, len(names)):
+                if names[ax]:
+                    g = jax.lax.all_gather(g, names[ax], axis=ax, tiled=True)
+            w = sched_mod.solve_outer(g, sched.solve.norm, radius, b, method)
+            for ax in range(b, len(names)):
+                if names[ax]:
+                    idx = jax.lax.axis_index(names[ax])
+                    w = jax.lax.dynamic_slice_in_dim(
+                        w, idx * local_sizes[ax], local_sizes[ax], axis=ax)
 
         # ---- backward sweep: applies stay local (clip / saved-norm rescale);
         # only a mesh-spanning l1 group needs the distributed θ-solve ------ #
         for i, app in zip(reversed(range(len(aggs))), sched.applies):
             names = stage_names[i]
             coll = tuple(names[a] for a in app.axes if names[a])
-            if app.norm == "1" and coll:
-                w = _grouped_l1_collective(inputs[i], w, app.axes, coll,
-                                           aggs[i])
-            else:
-                w = sched_mod.apply_group(inputs[i], app.norm, w, app.axes,
-                                          aggs[i], method)
+            with obs_profile.stage_scope(app, i):
+                if app.norm == "1" and coll:
+                    w = _grouped_l1_collective(inputs[i], w, app.axes, coll,
+                                               aggs[i])
+                else:
+                    w = sched_mod.apply_group(inputs[i], app.norm, w,
+                                              app.axes, aggs[i], method)
         return w
 
     return body

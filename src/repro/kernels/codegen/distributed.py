@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import schedule as sched_mod
 from repro.core.schedule import Schedule
+from repro.obs import profile as obs_profile
 
 from . import autotune_tiles
 from .lowering import (MONOIDS, _apply_call, _partial_apply_call,
@@ -172,26 +173,32 @@ def make_codegen_schedule_body(sched: Schedule,
     def inner(y, radius):
         if L == 1:
             # degenerate flat solve: the whole design IS the OuterSolve
-            return _solve_sliced(y.reshape(-1), norms[0],
-                                 radius).reshape(y.shape)
+            with obs_profile.scope(f"codegen_solve_{norms[0]}"):
+                return _solve_sliced(y.reshape(-1), norms[0],
+                                     radius).reshape(y.shape)
         yc = y.reshape(tp.canon_shape)
-        aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
-        if fin_coll:
-            # splice the final level's combine on the RAW accumulator (ℓ2
-            # is still in the squared domain here), then finalize
-            acc = jax.lax.pmax(acc, fin_coll) if norms[-2] == "inf" \
-                else jax.lax.psum(acc, fin_coll)
-        vfin = MONOIDS[norms[-2]].finalize(acc)
-        u = _solve_sliced(vfin, norms[-1], radius)
-        if norms[-2] == "1" and fin_coll:
-            # the final level's ℓ1 groups span the mesh: distributed θ-solve
-            # on the last resident stage, then resume the epilogue below it
-            src = yc if L == 2 else aggs[-1]
-            w = _grouped_l1_collective(src, u, (0,), fin_coll, vfin)
-            x = w if L == 2 else _partial_apply_call(yc, aggs, w, tp,
-                                                     norms[:-1], interpret)
-        else:
-            x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
+        with obs_profile.scope("codegen_partial_reduce"):
+            aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
+            if fin_coll:
+                # splice the final level's combine on the RAW accumulator (ℓ2
+                # is still in the squared domain here), then finalize
+                acc = jax.lax.pmax(acc, fin_coll) if norms[-2] == "inf" \
+                    else jax.lax.psum(acc, fin_coll)
+            vfin = MONOIDS[norms[-2]].finalize(acc)
+        with obs_profile.scope(f"codegen_solve_{norms[-1]}"):
+            u = _solve_sliced(vfin, norms[-1], radius)
+        with obs_profile.scope("codegen_apply"):
+            if norms[-2] == "1" and fin_coll:
+                # the final level's ℓ1 groups span the mesh: distributed
+                # θ-solve on the last resident stage, then resume the
+                # epilogue below it
+                src = yc if L == 2 else aggs[-1]
+                w = _grouped_l1_collective(src, u, (0,), fin_coll, vfin)
+                x = w if L == 2 else _partial_apply_call(yc, aggs, w, tp,
+                                                         norms[:-1],
+                                                         interpret)
+            else:
+                x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
         return x.reshape(y.shape)
 
     fn = inner

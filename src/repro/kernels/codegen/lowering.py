@@ -47,6 +47,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import ball, schedule as sched_mod
 from repro.core.schedule import Schedule
+from repro.obs import profile as obs_profile
 
 from .._compat import CompilerParams
 from . import backward as bwd_mod
@@ -390,12 +391,20 @@ def generate(sched: Schedule, dtype, *, method: str = "bisect",
         """Forward pipeline; also returns the VJP residual aggregates."""
         yc = y.reshape(tp.canon_shape)
         if len(norms) == 1:
-            out = _solve_outer_vec(yc, norms[0], radius, method, interpret)
+            with obs_profile.scope(f"codegen_solve_{norms[0]}"):
+                out = _solve_outer_vec(yc, norms[0], radius, method,
+                                       interpret)
             return out.reshape(y.shape), ()
-        aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
-        vfin = MONOIDS[norms[-2]].finalize(acc)
-        u = _solve_outer_vec(vfin, norms[-1], radius, method, interpret)
-        x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
+        # the three lowering boundaries of the fused pipeline — one scope
+        # each, so a captured trace attributes device time to the streaming
+        # reduce pass, the VMEM θ-solve, and the fused apply epilogue
+        with obs_profile.scope("codegen_reduce"):
+            aggs, acc = _reduce_call(yc, tp, norms[:-1], interpret)
+            vfin = MONOIDS[norms[-2]].finalize(acc)
+        with obs_profile.scope(f"codegen_solve_{norms[-1]}"):
+            u = _solve_outer_vec(vfin, norms[-1], radius, method, interpret)
+        with obs_profile.scope("codegen_apply"):
+            x = _apply_call(yc, aggs, vfin, u, tp, norms[:-1], interpret)
         return x.reshape(y.shape), (tuple(aggs), vfin, u)
 
     @jax.custom_vjp
@@ -605,12 +614,19 @@ def generate_batched(sched: Schedule, dtype, *, method: str = "bisect",
         batch = ys.shape[0]
         yc = ys.reshape((batch,) + tp.canon_shape)
         if len(norms) == 1:
-            out = _solve_outer_batched(yc, norms[0], radii, method, interpret)
+            with obs_profile.scope(f"codegen_solve_{norms[0]}"):
+                out = _solve_outer_batched(yc, norms[0], radii, method,
+                                           interpret)
             return out.reshape(ys.shape), ()
-        aggs, acc = _reduce_call_batched(yc, tp, norms[:-1], interpret)
-        vfin = MONOIDS[norms[-2]].finalize(acc)
-        u = _solve_outer_batched(vfin, norms[-1], radii, method, interpret)
-        x = _apply_call_batched(yc, aggs, vfin, u, tp, norms[:-1], interpret)
+        with obs_profile.scope("codegen_reduce"):
+            aggs, acc = _reduce_call_batched(yc, tp, norms[:-1], interpret)
+            vfin = MONOIDS[norms[-2]].finalize(acc)
+        with obs_profile.scope(f"codegen_solve_{norms[-1]}"):
+            u = _solve_outer_batched(vfin, norms[-1], radii, method,
+                                     interpret)
+        with obs_profile.scope("codegen_apply"):
+            x = _apply_call_batched(yc, aggs, vfin, u, tp, norms[:-1],
+                                    interpret)
         return x.reshape(ys.shape), (tuple(aggs), vfin, u)
 
     @jax.custom_vjp

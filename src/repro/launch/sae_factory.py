@@ -42,9 +42,14 @@ def main(argv=None) -> int:
                     help="full-size arch (default: smoke config)")
     ap.add_argument("--gsp", action="store_true",
                     help="also run whole-network GSP sparsification")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the factory run "
+                         "(projection stages appear as proj/* named scopes)")
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import make_host_mesh
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import profile as obs_profile
     from repro.training import sae_factory as F
 
     import jax
@@ -71,11 +76,13 @@ def main(argv=None) -> int:
                                        and "params" in tree) else tree
         print(f"harvesting from checkpoint step "
               f"{manifest.get('step', '?')} at {args.checkpoint}")
-    summary = F.run_factory(fcfg, out, seeds=seeds, lm_params=lm_params)
-    if args.gsp:
-        n_dev = jax.device_count()
-        mesh = make_host_mesh(1, n_dev) if n_dev > 1 else None
-        summary["gsp"] = F.gsp_whole_network(args.arch, mesh=mesh)
+    with obs_profile.capture(args.profile_dir):
+        summary = F.run_factory(fcfg, out, seeds=seeds, lm_params=lm_params)
+        if args.gsp:
+            n_dev = jax.device_count()
+            mesh = make_host_mesh(1, n_dev) if n_dev > 1 else None
+            summary["gsp"] = F.gsp_whole_network(args.arch, mesh=mesh)
+    obs_metrics.get_registry().write_jsonl(out / "metrics.jsonl")
     # json keys must be strings; layers come out as ints
     summary["layers"] = {str(k): v for k, v in summary["layers"].items()}
     (out / "summary.json").write_text(json.dumps(summary, indent=1,

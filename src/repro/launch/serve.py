@@ -17,8 +17,10 @@ import numpy as np
 from repro import models
 from repro.configs import registry
 from repro.models import params as PM
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 from repro.runtime import CheckpointManager
-from repro.serving import engine
+from repro.serving import lm
 
 
 def main():
@@ -29,6 +31,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the decode here")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the obs-registry snapshot (JSON lines) here")
     args = ap.parse_args()
 
     cfg = (registry.smoke_config(args.arch) if args.smoke
@@ -44,12 +50,19 @@ def main():
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
     t0 = time.perf_counter()
-    out = engine.generate(params, cfg, prompts, max_new=args.new)
-    out.block_until_ready()
+    with obs_profile.capture(args.profile_dir):
+        out = lm.generate(params, cfg, prompts, max_new=args.new)
+        out.block_until_ready()
     dt = time.perf_counter() - t0
     print(f"{args.batch} requests × {args.new} new tokens in {dt:.1f}s "
           f"({args.batch * args.new / dt:.1f} tok/s)")
     print("first request:", np.asarray(out[0]))
+    if args.metrics_out:
+        obs_metrics.get_registry().write_jsonl(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.profile_dir:
+        print(f"profiler trace -> {args.profile_dir} "
+              f"({len(obs_profile.trace_files(args.profile_dir))} files)")
 
 
 if __name__ == "__main__":

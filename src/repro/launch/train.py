@@ -24,6 +24,9 @@ from repro.configs import registry
 from repro.configs.types import ProjectionSpec, TrainConfig
 from repro.data import DataConfig, DataPipeline
 from repro.models import params as PM
+from repro.obs import jax_bridge
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 from repro.parallel import sharding as SH
 from repro.runtime import CheckpointManager, StragglerMonitor
 from repro.training import init_state, make_train_step
@@ -52,7 +55,23 @@ def main():
                     help=">0 enables the bi-level l1,inf constraint")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run here "
+                         "(schedule stages show up as proj/* named scopes)")
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help=">0 enables the host-callback telemetry bridge and "
+                         "ships loss/grad-norm/sparsity/feasibility every "
+                         "that many steps")
+    ap.add_argument("--telemetry-marks", action="store_true",
+                    help="also bracket the optimizer/projection epilogue "
+                         "with ordered timing marks (costly: serializes a "
+                         "host callback pair into every step)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the final obs-registry snapshot (JSON lines) "
+                         "to this path")
     args = ap.parse_args()
+    if args.telemetry_every > 0 or args.telemetry_marks:
+        jax_bridge.enable()
 
     cfg = (registry.smoke_config(args.arch) if args.smoke
            else registry.get_arch(args.arch))
@@ -82,7 +101,9 @@ def main():
             print(f"[elastic restart] resuming from step {start}")
     if state is None:
         state = init_state(cfg, tcfg, api, jax.random.PRNGKey(tcfg.seed))
-    with mesh:
+    step_hist = obs_metrics.get_registry().histogram(
+        "train_step_seconds", "end-to-end wall time of one training step")
+    with mesh, obs_profile.capture(args.profile_dir):
         state = {"params": jax.device_put(state["params"],
                                           SH.named(mesh, specs)),
                  "opt": state["opt"]}
@@ -91,14 +112,18 @@ def main():
         step_fn = jax.jit(make_train_step(
             cfg, tcfg, api, impl="naive" if args.smoke else "chunked",
             n_groups=SH.dp_shards(mesh), act_spec=act_spec,
-            mesh=mesh, param_specs=specs))
+            mesh=mesh, param_specs=specs,
+            telemetry_every=args.telemetry_every,
+            telemetry_marks=args.telemetry_marks))
 
         for step in range(start, args.steps):
             t0 = time.perf_counter()
             batch = {"tokens": jnp.asarray(pipe.batch(step))}
             state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
-            rep = mon.record({jax.process_index(): time.perf_counter() - t0})
+            dt = time.perf_counter() - t0
+            step_hist.observe(dt)
+            rep = mon.record({jax.process_index(): dt})
             if mgr and (step + 1) % tcfg.checkpoint_every == 0:
                 mgr.save_async(step + 1, state)
             if (step + 1) % 10 == 0 or step + 1 == args.steps:
@@ -113,6 +138,12 @@ def main():
     if proj:
         for name, sp in tree_sparsity(state["params"], proj).items():
             print(f"column sparsity {name}: {float(sp):.1f}%")
+    if args.metrics_out:
+        obs_metrics.get_registry().write_jsonl(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.profile_dir:
+        print(f"profiler trace -> {args.profile_dir} "
+              f"({len(obs_profile.trace_files(args.profile_dir))} files)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""repro.obs — dependency-free observability: metrics, jit bridge, profiling.
+
+Three small modules, stdlib-only (no prometheus_client, no opentelemetry —
+the container bakes in nothing beyond jax, and the hot paths cannot afford
+an import that drags a network stack in):
+
+* :mod:`repro.obs.metrics` — thread-safe counters / gauges / fixed-bucket
+  histograms with labels, a process-global default registry, ``snapshot()``
+  to nested dicts, JSON-lines and Prometheus text exporters, and a
+  ``timed()`` context manager;
+* :mod:`repro.obs.jax_bridge` — values computed *inside* jit (feasibility
+  gap, support size, loss) flow out through ``jax.debug.callback`` into the
+  registry, gated OFF by default so the un-instrumented trace is unchanged;
+* :mod:`repro.obs.profile` — ``capture(path)`` around ``jax.profiler.trace``
+  plus the stage-scope helpers the schedule executors wrap their
+  reduce/solve/apply stages in (named scopes land in the captured trace).
+"""
+from .metrics import (Counter, Gauge, Histogram, Registry,  # noqa: F401
+                      get_registry, set_registry, timed)
+from . import jax_bridge, metrics, profile  # noqa: F401
+
+REGISTRY = metrics.REGISTRY

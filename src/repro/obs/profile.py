@@ -1,0 +1,86 @@
+"""Profiler plumbing: trace capture + the schedule-stage named scopes.
+
+Two consumers:
+
+* launchers and benchmarks wrap a region in :func:`capture` — a thin,
+  None-tolerant wrapper over ``jax.profiler.trace`` (pass the launcher's
+  ``--profile-dir`` straight through; empty/None disables cleanly);
+* the schedule executors (``core/schedule.py`` jnp path,
+  ``core/sharded.py`` shard_map body, ``kernels/codegen`` lowering
+  boundaries) wrap each ReduceLevel/OuterSolve/ApplyGroup stage in
+  :func:`stage_scope` — a ``jax.named_scope`` whose name is derived from
+  the :class:`~repro.core.schedule.Schedule` step metadata, so a captured
+  trace attributes device time to the stages the paper's Θ(n+m)
+  complexity argument is actually about.
+
+Named scopes cost nothing at runtime (they are lowered-metadata only);
+:func:`host_span` is the host-side counterpart (``TraceAnnotation``) for
+dispatcher/queue work that never enters a trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import pathlib
+
+import jax
+
+# every projection stage scope shares this prefix — what trace tooling (and
+# tests/test_obs.py) greps a captured .xplane.pb for
+SCOPE_PREFIX = "proj"
+
+
+def stage_name(step, index: int | None = None) -> str:
+    """Scope name for one schedule step (``ReduceLevel``/``OuterSolve``/
+    ``ApplyGroup``): ``proj/reduce0_inf``, ``proj/solve_1``,
+    ``proj/apply0_inf`` — stable across executors so jnp, shard_map, and
+    codegen runs of one design line up in the trace viewer."""
+    kind = type(step).__name__
+    if kind == "ReduceLevel":
+        return f"{SCOPE_PREFIX}/reduce{index}_{step.norm}"
+    if kind == "OuterSolve":
+        return f"{SCOPE_PREFIX}/solve_{step.norm}"
+    if kind == "ApplyGroup":
+        return f"{SCOPE_PREFIX}/apply{index}_{step.norm}"
+    raise TypeError(f"not a schedule step: {step!r}")
+
+
+def stage_scope(step, index: int | None = None):
+    """``jax.named_scope`` for one schedule step (trace-time metadata only)."""
+    return jax.named_scope(stage_name(step, index))
+
+
+def scope(name: str):
+    """A raw ``proj/``-prefixed named scope (codegen lowering boundaries)."""
+    return jax.named_scope(f"{SCOPE_PREFIX}/{name}")
+
+
+def host_span(name: str):
+    """Host-side annotation (``jax.profiler.TraceAnnotation``) for work that
+    happens outside any traced computation — dispatcher picks, plan builds."""
+    return jax.profiler.TraceAnnotation(name)
+
+
+@contextlib.contextmanager
+def capture(path):
+    """Capture a profiler trace of the block into ``path``.
+
+    ``path`` falsy (None/"") disables capture — launchers pass their
+    ``--profile-dir`` flag through unconditionally. The directory is
+    created; afterwards it holds the ``.xplane.pb`` (plus a Perfetto
+    ``.trace.json.gz``) that ``jax.profiler`` tooling / TensorBoard read.
+    """
+    if not path:
+        yield None
+        return
+    path = os.fspath(path)
+    pathlib.Path(path).mkdir(parents=True, exist_ok=True)
+    with jax.profiler.trace(path):
+        yield path
+
+
+def trace_files(path):
+    """The capture artifacts under ``path`` (recursive; files only)."""
+    root = pathlib.Path(path)
+    return sorted(p for p in root.rglob("*") if p.is_file())

@@ -49,6 +49,7 @@ stored error; an unknown, already-claimed, or discarded ticket raises
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -59,12 +60,32 @@ import jax.numpy as jnp
 
 from repro.core import multilevel
 from repro.core import plan as planmod
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import timed
+
+# THE clock for everything time-shaped in this module — deadlines, queue
+# ages, latency accounting. A single *monotonic* source: wall-clock
+# (time.time) jumps — NTP steps, suspend/resume — must never expire a
+# deadline or corrupt a latency histogram (regression-pinned in
+# tests/test_serving.py). Tests monkeypatch this one name to fake time.
+_now = time.monotonic
 
 # (shape, dtype name, canonical levels, canonical method, sharding key) —
 # same grouping rule as ProjectionService: requests share a dispatch iff
 # they share a planner executable
 GroupKey = Tuple[Tuple[int, ...], str, Tuple[Tuple[str, int], ...], str,
                  object]
+
+# batch-size distribution buckets: the pow-2 dispatch buckets themselves
+_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def _key_label(key: GroupKey) -> str:
+    """Compact per-plan-key metric label: ``6x10/float32/inf1-11/sort``."""
+    shape, dtype, levels, method, shard = key
+    lv = "-".join(f"{q}{k}" for q, k in levels)
+    base = f"{'x'.join(map(str, shape))}/{dtype}/{lv}/{method}"
+    return base + "/sharded" if shard is not None else base
 
 
 class ServingError(RuntimeError):
@@ -116,9 +137,79 @@ class _Request:
         self.ticket = ticket
         self.y = y
         self.radius = radius
-        self.deadline = deadline          # absolute time.monotonic(), or None
+        self.deadline = deadline          # absolute _now() time, or None
         self.attempts = 0
-        self.enqueued = time.monotonic()
+        self.enqueued = _now()
+
+
+class EngineStats(dict):
+    """The engine's operational counters — a plain dict (back-compat:
+    ``eng.stats["dispatches"]``) that is ALSO callable: ``eng.stats()``
+    returns the full structured snapshot (counters, queue state, per-key
+    latency summaries, planner cache info). See
+    :meth:`ProjectionEngine.stats_snapshot`."""
+
+    def __init__(self, engine: "ProjectionEngine", *args, **kw):
+        super().__init__(*args, **kw)
+        self._engine = engine
+
+    def __call__(self) -> dict:
+        return self._engine.stats_snapshot()
+
+
+class _EngineMetrics:
+    """The engine's registry handles, built once per engine.
+
+    All series live in the process-global obs registry (labelled by plan
+    key where it matters), so one scrape sees every engine in the process.
+    ``instrument=False`` engines skip this object entirely — the bare hot
+    path performs zero registry operations (the ≤2% overhead-off gate in
+    benchmarks/obs_overhead.py measures exactly that configuration).
+    """
+
+    def __init__(self):
+        reg = obs_metrics.get_registry()
+        self.queue_depth = reg.gauge(
+            "serving_queue_depth", "queued (undispatched) requests")
+        self.inflight = reg.gauge(
+            "serving_inflight_requests", "popped but not yet completed")
+        self.events = reg.counter(
+            "serving_events_total", "engine lifecycle events",
+            labels=("event",))
+        self.queue_s = reg.histogram(
+            "serving_queue_seconds", "submit -> dispatch-pop wait",
+            labels=("key",))
+        self.e2e_s = reg.histogram(
+            "serving_e2e_seconds", "submit -> completion latency",
+            labels=("key",))
+        self.dispatch_s = reg.histogram(
+            "serving_dispatch_seconds", "one group's execute time",
+            labels=("key",))
+        self.batch_size = reg.histogram(
+            "serving_batch_size", "requests per dispatch",
+            buckets=_BATCH_BUCKETS)
+        self.plan_build_s = reg.histogram(
+            "serving_plan_build_seconds", "plan build on the warm pool")
+        self.warm_s = reg.histogram(
+            "serving_warm_seconds", "warm-bucket pre-trace on the warm pool")
+        # hot-path handle caches: resolving a labelled child costs a label
+        # check + tuple build + lock per call — done ONCE per key/event
+        # here, so the per-request cost is a dict hit (GIL-atomic)
+        self._by_key: Dict[GroupKey, tuple] = {}
+        self.ev = {name: self.events.labels(event=name)
+                   for name in ("submitted", "rejected", "expired",
+                                "requeue", "failure", "dispatch",
+                                "completed", "failed", "discarded")}
+
+    def for_key(self, key: GroupKey) -> tuple:
+        """(queue_s, e2e_s, dispatch_s) histogram children for one key."""
+        h = self._by_key.get(key)
+        if h is None:
+            lbl = _key_label(key)
+            h = (self.queue_s.labels(key=lbl), self.e2e_s.labels(key=lbl),
+                 self.dispatch_s.labels(key=lbl))
+            self._by_key[key] = h
+        return h
 
 
 class ProjectionEngine:
@@ -146,6 +237,11 @@ class ProjectionEngine:
                   one mid-replay compile delays the whole backlog. 0 (the
                   default) builds plans only.
     interpret:    run Pallas-backed plans in interpreter mode (tests/CPU).
+    instrument:   record queue/latency/batch/deadline metrics into the
+                  process-global obs registry (``repro.obs``). ``False`` is
+                  the bare hot path — zero registry operations per request
+                  (the counter dict ``stats`` is always maintained either
+                  way; only histograms/gauges/labelled series are gated).
     start:        launch the background dispatcher thread. With
                   ``start=False`` the engine is synchronous: nothing runs
                   until :meth:`drain` dispatches inline (deterministic mode
@@ -156,7 +252,7 @@ class ProjectionEngine:
                  max_pending: int = 1024, donate: bool = True,
                  max_attempts: int = 2, warm_workers: int = 2,
                  warm_buckets: int = 0, interpret: bool = False,
-                 start: bool = True):
+                 instrument: bool = True, start: bool = True):
         if max_batch < 1 or max_pending < 1 or max_attempts < 1:
             raise ValueError(
                 "max_batch, max_pending, max_attempts must be >= 1")
@@ -173,11 +269,15 @@ class ProjectionEngine:
         self._fused: Dict[Tuple[GroupKey, int], object] = {}
         self._pending_count = 0
         self._inflight = 0
+        self._inflight_reqs = 0
         self._next_ticket = 0
         self._stopping = False
-        self.stats = {"submitted": 0, "dispatches": 0, "batched_requests": 0,
-                      "rejected": 0, "expired": 0, "requeues": 0,
-                      "failures": 0, "max_group": 0}
+        self.stats = EngineStats(
+            self, {"submitted": 0, "dispatches": 0, "batched_requests": 0,
+                   "rejected": 0, "expired": 0, "requeues": 0,
+                   "failures": 0, "max_group": 0, "completed": 0,
+                   "failed": 0, "discarded": 0})
+        self._metrics = _EngineMetrics() if instrument else None
         self._warm = ThreadPoolExecutor(max_workers=int(warm_workers),
                                         thread_name_prefix="plan-warm")
         self._thread: Optional[threading.Thread] = None
@@ -225,13 +325,15 @@ class ProjectionEngine:
                 f"radius must be a scalar (one per request), got shape "
                 f"{radius.shape}")
         key: GroupKey = (y.shape, y.dtype.name, levels, requested, shard_key)
-        abs_deadline = None if deadline is None else \
-            time.monotonic() + float(deadline)
+        abs_deadline = None if deadline is None else _now() + float(deadline)
+        m = self._metrics
         with self._cv:
             if self._stopping:
                 raise ServingError("engine is stopped")
             if self._pending_count >= self.max_pending:
                 self.stats["rejected"] += 1
+                if m:
+                    m.ev["rejected"].inc()
                 raise QueueFullError(
                     f"{self._pending_count} requests queued "
                     f"(max_pending={self.max_pending})")
@@ -241,6 +343,9 @@ class ProjectionEngine:
                 _Request(ticket, y, radius, abs_deadline))
             self._pending_count += 1
             self.stats["submitted"] += 1
+            if m:
+                m.ev["submitted"].inc()
+                m.queue_depth.set(self._pending_count)
             self._ensure_plan_locked(key)
             self._cv.notify_all()
         return ticket
@@ -287,6 +392,13 @@ class ProjectionEngine:
     def _build_plans(self, key: GroupKey) -> Dict[str, planmod.ProjectionPlan]:
         """Build every plan flavour one key dispatches through (runs on the
         warm pool, so a cold key never stalls the dispatcher)."""
+        if self._metrics:
+            with timed(self._metrics.plan_build_s):
+                return self._build_plans_inner(key)
+        return self._build_plans_inner(key)
+
+    def _build_plans_inner(self, key: GroupKey
+                           ) -> Dict[str, planmod.ProjectionPlan]:
         shape, dtype, levels, method, shard_key = key
         if shard_key is not None:
             # sharded: per-request scalar plan, no donation (the sharded
@@ -322,15 +434,18 @@ class ProjectionEngine:
         dtype = jnp.dtype(dtype_name)
         dummy = lambda: _Request(None, jnp.zeros(shape, dtype),
                                  jnp.asarray(0.5, dtype), None)
+        ctx = timed(self._metrics.warm_s) if self._metrics \
+            else contextlib.nullcontext()
         try:
-            if "scalar" in plans:
-                r = dummy()
-                jax.block_until_ready(plans["scalar"](r.y, r.radius))
-            b, done = 1, 0
-            while b <= self.max_batch and done < self.warm_buckets:
-                jax.block_until_ready(
-                    self._run_group(key, plans, [dummy() for _ in range(b)]))
-                b, done = b * 2, done + 1
+            with ctx:
+                if "scalar" in plans:
+                    r = dummy()
+                    jax.block_until_ready(plans["scalar"](r.y, r.radius))
+                b, done = 1, 0
+                while b <= self.max_batch and done < self.warm_buckets:
+                    jax.block_until_ready(self._run_group(
+                        key, plans, [dummy() for _ in range(b)]))
+                    b, done = b * 2, done + 1
         except Exception:
             pass
 
@@ -345,6 +460,7 @@ class ProjectionEngine:
 
     def _dispatch_once(self, wait_s: float = 0.02) -> bool:
         """Pop and execute one group; returns whether anything ran."""
+        m = self._metrics
         with self._cv:
             key = self._select_key_locked()
             if key is None:
@@ -356,11 +472,22 @@ class ProjectionEngine:
                 self._queues[key] = rest
             self._pending_count -= len(take)
             self._inflight += 1
+            self._inflight_reqs += len(take)
+            if m:
+                m.queue_depth.set(self._pending_count)
+                m.inflight.set(self._inflight_reqs)
+        if m:
+            popped, (queue_h, _, _) = _now(), m.for_key(key)
+            for r in take:
+                queue_h.observe(popped - r.enqueued)
         try:
             self._execute(key, take)
         finally:
             with self._cv:
                 self._inflight -= 1
+                self._inflight_reqs -= len(take)
+                if m:
+                    m.inflight.set(self._inflight_reqs)
                 self._cv.notify_all()
         return True
 
@@ -387,6 +514,10 @@ class ProjectionEngine:
         return best
 
     def _execute(self, key: GroupKey, reqs: List[_Request]) -> None:
+        m = self._metrics
+        e2e_h = dispatch_h = None
+        if m:
+            _, e2e_h, dispatch_h = m.for_key(key)
         try:
             plans = self._plans[key].result()
         except Exception as exc:
@@ -398,13 +529,15 @@ class ProjectionEngine:
             for r in reqs:
                 self._fail(r.ticket, err)
             return
-        now = time.monotonic()
+        now = _now()
         live = []
         for r in reqs:
             if r.ticket._state != "pending":      # discarded before dispatch
                 continue
             if r.deadline is not None and now > r.deadline:
                 self.stats["expired"] += 1
+                if m:
+                    m.ev["expired"].inc()
                 self._fail(r.ticket, DeadlineExceededError(
                     f"ticket {r.ticket.id} expired "
                     f"{now - r.deadline:.3f}s before dispatch"))
@@ -413,7 +546,10 @@ class ProjectionEngine:
         if not live:
             return
         try:
+            t0 = _now()
             outs = self._run_group(key, plans, live)
+            if m:
+                dispatch_h.observe(_now() - t0)
         except Exception as exc:
             for r in live:
                 r.attempts += 1
@@ -421,12 +557,16 @@ class ProjectionEngine:
             spent = [r for r in live if r.attempts >= self.max_attempts]
             for r in spent:
                 self.stats["failures"] += 1
+                if m:
+                    m.ev["failure"].inc()
                 err = ServingError(
                     f"dispatch failed after {r.attempts} attempt(s): {exc!r}")
                 err.__cause__ = exc
                 self._fail(r.ticket, err)
             if retry:
                 self.stats["requeues"] += 1
+                if m:
+                    m.ev["requeue"].inc()
                 with self._cv:
                     # re-queue at the front, order preserved
                     self._queues.setdefault(key, [])[0:0] = retry
@@ -437,8 +577,14 @@ class ProjectionEngine:
         self.stats["max_group"] = max(self.stats["max_group"], len(live))
         if len(live) > 1:
             self.stats["batched_requests"] += len(live)
+        if m:
+            m.ev["dispatch"].inc()
+            m.batch_size.observe(len(live))
+        done = _now()
         for r, out in zip(live, outs):
             self._complete(r.ticket, out)
+            if m:
+                e2e_h.observe(done - r.enqueued)
 
     def _fused_dispatch(self, key: GroupKey, plans, b: int):
         """One jitted executable per (key, bucket): stack → project →
@@ -490,6 +636,9 @@ class ProjectionEngine:
                 return
             ticket._state = "done"
             ticket._value = value
+            self.stats["completed"] += 1
+        if self._metrics:
+            self._metrics.ev["completed"].inc()
         ticket._event.set()
 
     def _fail(self, ticket: Ticket, error: BaseException) -> None:
@@ -498,6 +647,9 @@ class ProjectionEngine:
                 return
             ticket._state = "failed"
             ticket._error = error
+            self.stats["failed"] += 1
+        if self._metrics:
+            self._metrics.ev["failed"].inc()
         ticket._event.set()
 
     # ------------------------------------------------------------ results
@@ -541,6 +693,25 @@ class ProjectionEngine:
         with self._cv:
             if ticket._state == "claimed":
                 return
+            if ticket._state == "pending":
+                # terminal accounting: a request discarded before its
+                # dispatch is neither completed nor failed. If it is still
+                # queued it leaves the queue NOW (so queued+discarded never
+                # double-count it and its slot frees immediately); a request
+                # already popped into a dispatch is skipped at completion.
+                q = self._queues.get(ticket.key)
+                if q is not None:
+                    for i, r in enumerate(q):
+                        if r.ticket is ticket:
+                            del q[i]
+                            if not q:
+                                del self._queues[ticket.key]
+                            self._pending_count -= 1
+                            break
+                self.stats["discarded"] += 1
+                if self._metrics:
+                    self._metrics.ev["discarded"].inc()
+                    self._metrics.queue_depth.set(self._pending_count)
             ticket._state = "discarded"
             ticket._value = None
             ticket._error = None
@@ -558,23 +729,53 @@ class ProjectionEngine:
         with self._cv:
             return self._pending_count
 
+    # ------------------------------------------------------- observability
+
+    def stats_snapshot(self) -> dict:
+        """Structured operational snapshot (what ``eng.stats()`` returns).
+
+        Counters plus live queue state plus — on instrumented engines —
+        per-plan-key latency summaries (p50/p99 seconds, bucket-estimated)
+        and the planner's cache counters. Accounting invariant (pinned in
+        tests/test_serving.py)::
+
+            completed + failed + discarded + queued + inflight == submitted
+        """
+        with self._cv:
+            snap: dict = dict(self.stats)
+            snap["queued"] = self._pending_count
+            snap["inflight"] = self._inflight_reqs
+        m = self._metrics
+        if m is not None:
+            lat = {}
+            for fam, field in ((m.queue_s, "queue"), (m.e2e_s, "e2e")):
+                for child in fam.children():
+                    key = child.labelvalues[0]
+                    d = lat.setdefault(key, {})
+                    d[f"{field}_count"] = child.count
+                    d[f"{field}_p50_s"] = child.quantile(0.5)
+                    d[f"{field}_p99_s"] = child.quantile(0.99)
+            snap["latency"] = lat
+            snap["batch_p50"] = m.batch_size.quantile(0.5)
+        snap["plan_cache"] = planmod.cache_info()
+        return snap
+
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted request has completed. With
         ``start=False`` this IS the dispatcher: groups execute inline, on
         this thread, until the queue is empty."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else _now() + timeout
         if self._thread is None:
             while True:
                 with self._cv:
                     if not self._pending_count and not self._inflight:
                         return
-                if deadline is not None and time.monotonic() > deadline:
+                if deadline is not None and _now() > deadline:
                     raise TimeoutError("drain timed out")
                 self._dispatch_once(wait_s=0.005)
         with self._cv:
             while self._pending_count or self._inflight:
-                left = None if deadline is None else \
-                    deadline - time.monotonic()
+                left = None if deadline is None else deadline - _now()
                 if left is not None and left <= 0:
                     raise TimeoutError("drain timed out")
                 self._cv.wait(left if left is not None else 0.1)

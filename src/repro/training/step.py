@@ -22,14 +22,17 @@ instead of three separate sweeps (``fused="auto"`` — force with
 from __future__ import annotations
 
 import functools
+import re
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.types import ArchConfig, TrainConfig
+from repro.core import multilevel
+from repro.obs import jax_bridge
 from repro.optim import adamw, fused_step
-from repro.optim.projection_hook import make_projection_hook
+from repro.optim.projection_hook import _path_str, make_projection_hook
 
 
 def xent(logits, targets):
@@ -71,6 +74,8 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
                     act_spec=None, logits_spec=None,
                     mesh=None, param_specs=None,
                     fused: bool | str = "auto",
+                    telemetry_every: int = 0,
+                    telemetry_marks: bool = False,
                     loss_fn: Callable = None) -> Callable:
     """Build the jitted projected train step (see module docstring).
 
@@ -79,6 +84,20 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
     and streams (n_micro, mb, d_model) activation batches through the same
     grad-accumulation scan, fused AdamW+project epilogue included
     (``batch["tokens"]`` is the per-step data leaf whatever its dtype/rank).
+
+    ``telemetry_every > 0`` ships in-step telemetry to the obs registry
+    through the host-callback bridge every that many steps (loss, grad norm,
+    and — when projecting — per-leaf zero fraction and feasibility gap),
+    batched in one ``lax.cond`` so off-cadence steps pay nothing.
+    ``telemetry_marks=True`` additionally brackets the optimizer/projection
+    epilogue with an *ordered* mark pair (``train_epilogue_seconds`` /
+    ``train_projection_seconds`` histograms — the projection-time share of a
+    step). Ordered callbacks serialize with the computation on EVERY step
+    (they cannot ride the cadence cond), so marks are an opt-in deep-dive
+    tool, priced separately by ``benchmarks/obs_overhead.py``. All of it
+    rides :mod:`repro.obs.jax_bridge`, whose gate is trace-time static:
+    with the bridge disabled the lowered step is bit-identical to
+    ``telemetry_every=0`` (the overhead-off gate pins this).
     """
     compute_dtype = jnp.dtype(tcfg.compute_dtype)
     if loss_fn is None:
@@ -105,6 +124,39 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
     project = None if use_fused else make_projection_hook(
         tcfg.projection, mesh=mesh, param_specs=param_specs)
 
+    emit_leaves = None
+    if telemetry_every and projecting:
+        # trace-time-static leaf matching (same rule as the hook); values
+        # compute INSIDE the cond branch, so off-cadence steps pay nothing
+        spec = tcfg.projection
+        pat = re.compile(spec.pattern)
+        need = sum(k for _, k in spec.levels)
+
+        def _leaf_stats(w):
+            x = w.astype(jnp.float32)
+            if spec.transpose:
+                x = jnp.swapaxes(x, -1, x.ndim - need) if need == 2 else \
+                    jnp.transpose(x, tuple(range(x.ndim - need)) + tuple(
+                        reversed(range(x.ndim - need, x.ndim))))
+            fn = lambda v: multilevel.multilevel_norm(v, list(spec.levels))
+            for _ in range(x.ndim - need):
+                fn = jax.vmap(fn)
+            worst = jnp.max(fn(x))
+            return jnp.mean(w == 0), worst / spec.radius - 1.0
+
+        def emit_leaves(params):
+            def one(path, w):
+                name = _path_str(path)
+                if w.ndim >= need and pat.search(name):
+                    zero_frac, gap = _leaf_stats(w)
+                    jax_bridge.report("train_param_zero_frac", zero_frac,
+                                      labels={"leaf": name})
+                    jax_bridge.report("train_feasibility_gap", gap,
+                                      labels={"leaf": name})
+                return w
+
+            jax.tree_util.tree_map_with_path(one, params)
+
     def train_step(state, batch):
         params = state["params"]
         tokens = batch["tokens"]              # (n_micro, mb, S)
@@ -129,13 +181,21 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
 
         if use_fused:
             # one pass per leaf: update → project (f32) → cast param/master
+            if telemetry_marks:
+                jax_bridge.mark("train_epilogue_start")
             new_params, new_opt, metrics = fused_step.fused_update(
                 grads, state["opt"], params, tcfg)
+            if telemetry_marks:
+                jax_bridge.mark("train_epilogue_end")
         else:
             new_params, new_opt, metrics = adamw.update(grads, state["opt"],
                                                         params, tcfg)
             # the paper's constraint: project back onto the norm ball
+            if telemetry_marks:
+                jax_bridge.mark("train_projection_start")
             new_params = project(new_params, new_opt["step"])
+            if telemetry_marks:
+                jax_bridge.mark("train_projection_end")
             # keep the master copy consistent with the projected params
             if "master" in new_opt and projecting:
                 new_opt = dict(new_opt)
@@ -143,6 +203,19 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, api, *,
                     lambda p, m: p.astype(m.dtype), new_params,
                     new_opt["master"])
         metrics = dict(metrics, loss=loss)
+        if telemetry_every and jax_bridge.enabled():
+            def _emit(op):
+                loss_v, gnorm_v, ps = op
+                jax_bridge.report("train_loss", loss_v)
+                jax_bridge.report("train_grad_norm", gnorm_v)
+                if emit_leaves is not None:
+                    emit_leaves(ps)
+                return jnp.zeros((), jnp.int32)
+
+            jax.lax.cond(
+                new_opt["step"] % telemetry_every == 0, _emit,
+                lambda op: jnp.zeros((), jnp.int32),
+                (loss, metrics["grad_norm"], new_params))
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step

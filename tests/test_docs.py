@@ -13,14 +13,15 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # markdown files whose ```python blocks must execute cleanly, in order
 EXECUTABLE_DOCS = ["docs/api.md", "docs/serving.md", "docs/sae.md",
-                   "README.md"]
+                   "docs/observability.md", "README.md"]
 
 # modules whose docstring ``>>>`` examples must pass (and exist)
-DOCTEST_MODULES = ["repro.core.plan"]
+DOCTEST_MODULES = ["repro.core.plan", "repro.obs.metrics"]
 # modules doctested opportunistically (no examples required yet)
 DOCTEST_OPTIONAL = ["repro.core.ball", "repro.core.multilevel",
                     "repro.core.bilevel", "repro.serving.engine",
-                    "repro.serving.projection_service"]
+                    "repro.serving.projection_service",
+                    "repro.obs.jax_bridge", "repro.obs.profile"]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 

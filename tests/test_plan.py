@@ -135,8 +135,72 @@ class TestPlanCache:
         plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
         assert plan.cache_info()["plans"] == 1
         plan.clear_cache()
-        assert plan.cache_info() == {"plans": 0, "executables": 0,
-                                     "auto_winners": 0}
+        info = plan.cache_info()
+        assert info["plans"] == info["executables"] == 0
+        assert info["auto_winners"] == 0
+
+    def test_cache_info_hit_miss_counters(self):
+        # generation counters: first build is a miss, the repeat is a hit
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        info = plan.cache_info()
+        assert info["plan_misses"] == 1 and info["plan_hits"] == 0
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        info = plan.cache_info()
+        assert info["plan_misses"] == 1 and info["plan_hits"] == 1
+        # a different key is another miss, not a hit
+        plan.make_plan((4, 8), jnp.float32, BILEVEL, method="sort")
+        assert plan.cache_info()["plan_misses"] == 2
+
+    def test_cache_info_retrace_counter(self):
+        y = _rand((4, 6), seed=40)
+        p = plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        p(y, 1.0)
+        p(y, 2.0)
+        assert plan.cache_info()["retraces"] == 0  # jit cache held
+
+    def test_cache_info_autotune_counters(self):
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto")
+        info = plan.cache_info()
+        assert info["autotune_runs"] == 1 and info["autotune_hits"] == 0
+        # an identical repeat hits the plan memo BEFORE the winner lookup
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto")
+        info = plan.cache_info()
+        assert info["autotune_runs"] == 1 and info["autotune_hits"] == 0
+        assert info["plan_hits"] == 1
+        # a plan-memo miss for the same PlanKey (different donate flag)
+        # reuses the cached verdict instead of re-running the shoot-out
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="auto",
+                       donate=True)
+        info = plan.cache_info()
+        assert info["autotune_runs"] == 1 and info["autotune_hits"] == 1
+
+    def test_evictions_cumulative_across_clear(self):
+        # hit/miss counters reset with the generation; evictions are
+        # Prometheus-counter cumulative (the clear IS the eviction event)
+        plan.clear_cache()
+        base = plan.cache_info()["evictions"]
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+        n_cached = (plan.cache_info()["plans"]
+                    + plan.cache_info()["executables"]
+                    + plan.cache_info()["auto_winners"])
+        plan.clear_cache()
+        info = plan.cache_info()
+        assert info["evictions"] == base + n_cached
+        assert info["plan_hits"] == info["plan_misses"] == 0
+
+    def test_cache_info_mirrors_to_obs_gauge(self):
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.Registry()
+        prev = obs_metrics.set_registry(reg)
+        try:
+            plan.make_plan((4, 6), jnp.float32, BILEVEL, method="sort")
+            info = plan.cache_info()
+            gauge = reg.gauge("plan_cache", labels=("stat",))
+            for name, v in info.items():
+                assert gauge.labels(stat=name).value == v
+        finally:
+            obs_metrics.set_registry(prev)
 
 
 class TestAutoThreading:

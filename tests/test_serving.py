@@ -358,3 +358,148 @@ class TestProjectionEngine:
             t = eng.submit(y, [("1", 1)], radius=1.0)
             out = eng.result(t, timeout=60.0)
         np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+class TestEngineObservability:
+    """PR-10 serving telemetry: the stats() snapshot and its accounting
+    invariant, the single monotonic clock behind every deadline, and the
+    instrument=False bare path."""
+
+    def _eng(self, **kw):
+        from repro.core import plan
+        from repro.serving import ProjectionEngine
+        plan.clear_cache()
+        kw.setdefault("method", "sort")
+        kw.setdefault("start", False)
+        return ProjectionEngine(**kw)
+
+    @staticmethod
+    def _accounted(s):
+        return (s["completed"] + s["failed"] + s["discarded"]
+                + s["queued"] + s["inflight"])
+
+    def test_stats_dict_and_callable(self):
+        # back-compat: eng.stats is the counters dict; eng.stats() is the
+        # structured snapshot
+        eng = self._eng()
+        eng.result(eng.submit(jnp.ones((8,)), [("1", 1)]))
+        assert eng.stats["dispatches"] == 1
+        snap = eng.stats()
+        assert snap["dispatches"] == 1 and snap["queued"] == 0
+        eng.stop()
+
+    def test_lifecycle_invariant(self):
+        # pinned by stats_snapshot's docstring:
+        #   completed + failed + discarded + queued + inflight == submitted
+        eng = self._eng()
+        lv = [("1", 1)]
+        ts = [eng.submit(jnp.ones((8,)), lv) for _ in range(5)]
+        s = eng.stats()
+        assert s["submitted"] == 5 and s["queued"] == 5
+        assert self._accounted(s) == 5
+        eng.discard(ts[0])
+        s = eng.stats()
+        assert s["discarded"] == 1 and self._accounted(s) == 5
+        eng.drain()
+        s = eng.stats()
+        assert s["completed"] == 4 and self._accounted(s) == 5
+        # failed leg: every dispatch attempt raises -> tickets end failed
+        def boom(key, plans, live):
+            raise RuntimeError("injected")
+        eng._run_group = boom
+        eng.submit(jnp.ones((8,)), lv)
+        eng.drain()
+        s = eng.stats()
+        assert s["failed"] == 1 and self._accounted(s) == s["submitted"] == 6
+        eng.stop()
+
+    def test_rejected_not_counted_as_submitted(self):
+        from repro.serving import QueueFullError
+        eng = self._eng(max_pending=1)
+        eng.submit(jnp.ones((8,)), [("1", 1)])
+        with pytest.raises(QueueFullError):
+            eng.submit(jnp.ones((8,)), [("1", 1)])
+        s = eng.stats()
+        assert s["rejected"] == 1 and s["submitted"] == 1
+        assert self._accounted(s) == 1
+        eng.stop()
+
+    def test_snapshot_latency_and_plan_cache(self):
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.Registry()
+        prev = obs_metrics.set_registry(reg)
+        try:
+            eng = self._eng()
+            for i in range(3):
+                eng.result(eng.submit(
+                    jnp.full((6, 10), float(i + 1)),
+                    [("inf", 1), ("1", 1)], radius=1.0))
+            snap = eng.stats()
+            assert snap["latency"], "instrumented engine reports latency"
+            (key, lat), = snap["latency"].items()
+            assert "6x10" in key and lat["e2e_count"] == 3
+            assert lat["e2e_p99_s"] >= lat["e2e_p50_s"] >= 0.0
+            # bucket-interpolated: all-singleton batches estimate inside
+            # the (0, 1] bucket
+            assert 0.0 < snap["batch_p50"] <= 1.0
+            assert snap["plan_cache"]["plans"] >= 1
+            # the same series back the Prometheus export
+            text = reg.to_prometheus()
+            assert "serving_e2e_seconds_bucket" in text
+            assert 'serving_events_total{event="completed"} 3' in text
+            eng.stop()
+        finally:
+            obs_metrics.set_registry(prev)
+
+    def test_instrument_false_bare_path(self):
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.Registry()
+        prev = obs_metrics.set_registry(reg)
+        try:
+            eng = self._eng(instrument=False)
+            eng.result(eng.submit(jnp.ones((8,)), [("1", 1)]))
+            snap = eng.stats()
+            assert snap["completed"] == 1
+            assert "latency" not in snap and "batch_p50" not in snap
+            assert self._accounted(snap) == 1
+            # nothing was recorded into the registry by this engine
+            assert not any(n.startswith("serving_")
+                           for n in reg.snapshot())
+            eng.stop()
+        finally:
+            obs_metrics.set_registry(prev)
+
+    def test_engine_source_never_reads_wall_clock(self):
+        # the single-clock satellite: every engine timestamp goes through
+        # the module-level ``_now`` (monotonic); wall clock is forbidden
+        import inspect
+
+        from repro.serving import engine as engmod
+        src = inspect.getsource(engmod)
+        assert "time.time(" not in src
+        assert engmod._now is time.monotonic
+
+    def test_wall_clock_jump_does_not_expire_deadlines(self, monkeypatch):
+        # regression: an NTP step / wall-clock jump mid-flight must not
+        # expire deadlines — they live on the fake-able monotonic ``_now``
+        from repro.serving import DeadlineExceededError
+        from repro.serving import engine as engmod
+        fake = {"t": 1000.0}
+        monkeypatch.setattr(engmod, "_now", lambda: fake["t"])
+        eng = self._eng()
+        t1 = eng.submit(jnp.ones((8,)), [("1", 1)], deadline=5.0)
+        with monkeypatch.context() as mp:
+            # wall clock leaps a year; monotonic advanced only 1s
+            mp.setattr(time, "time", lambda: time.monotonic() + 3.2e7)
+            fake["t"] += 1.0
+            eng.drain()
+        assert jnp.asarray(eng.result(t1)).shape == (8,)
+        assert eng.stats["expired"] == 0
+        # the monotonic clock alone drives expiry
+        t2 = eng.submit(jnp.ones((8,)), [("1", 1)], deadline=5.0)
+        fake["t"] += 10.0
+        eng.drain()
+        assert eng.stats["expired"] == 1
+        with pytest.raises(DeadlineExceededError):
+            eng.result(t2)
+        eng.stop()
